@@ -1,0 +1,171 @@
+"""Roofline assembly from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json and reconstructs, per (arch × shape) cell on
+the single-pod mesh:
+
+    flops_total  = fixed + L * per_layer         (probe finite difference)
+    bytes_total  = same reconstruction on 'bytes accessed'
+    coll_bytes   = loop-weighted collective bytes of the full lowering
+
+    compute_term    = flops_total / 197e12            [s, per chip]
+    memory_term     = bytes_total / 819e9             [s, per chip]
+    collective_term = coll_bytes  / 50e9              [s, per chip, 1 link]
+
+cost_analysis counts a while body once, so the probes lower the model with
+layers and inner loops UNROLLED at L=2 and L=4; per-layer cost is the
+finite difference and the fixed part (embedding, unembed, loss, optimizer)
+falls out (DESIGN.md §8).  MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill/
+decode), with N = active params for MoE; the ratio MODEL_FLOPS/HLO_FLOPs
+exposes remat and dispatch overheads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs import get_config
+from repro.models.config import SHAPES_BY_NAME
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DRYRUN = os.path.join(HERE, "..", "experiments", "dryrun")
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+ARCHS = ["hymba-1.5b", "yi-6b", "llama3-8b", "qwen1.5-4b", "granite-3-8b",
+         "whisper-large-v3", "kimi-k2-1t-a32b", "llama4-scout-17b-a16e",
+         "chameleon-34b", "mamba2-130m"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(tag: str) -> Optional[Dict]:
+    p = os.path.join(DRYRUN, tag + ".json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def model_flops_per_device(arch: str, shape_name: str) -> float:
+    """Useful model FLOPs per step per chip (single-pod, 256 chips)."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence per step
+        total = 2.0 * n * shape.global_batch
+    return total / CHIPS
+
+
+def cell_roofline(arch: str, shape: str) -> Optional[Dict]:
+    full = _load(f"{arch}_{shape}_16x16")
+    if full is None:
+        return None
+    if full.get("status") == "SKIP":
+        return {"arch": arch, "shape": shape, "status": "SKIP",
+                "reason": full.get("skip_reason", "")}
+    if full.get("status") != "OK":
+        return {"arch": arch, "shape": shape, "status": "FAIL",
+                "reason": full.get("error", "")[:200]}
+    p2 = _load(f"{arch}_{shape}_16x16_probe2")
+    p4 = _load(f"{arch}_{shape}_16x16_probe4")
+    cfg = get_config(arch)
+    L = cfg.layers
+
+    rec = {"arch": arch, "shape": shape, "status": "OK",
+           "devices": full["devices"],
+           "microbatches": full.get("microbatches"),
+           "peak_bytes": full["memory"]["peak_bytes"],
+           "arg_bytes": full["memory"]["argument_bytes"],
+           "temp_bytes": full["memory"]["temp_bytes"]}
+
+    if p2 and p4 and p2.get("status") == "OK" and p4.get("status") == "OK":
+        def recon(key):
+            a, b = p2["cost"][key], p4["cost"][key]
+            if a is None or b is None:
+                return None
+            per_layer = (b - a) / 2.0
+            fixed = a - 2.0 * per_layer
+            return max(0.0, fixed + L * per_layer), per_layer, fixed
+        fl = recon("flops")
+        by = recon("bytes_accessed")
+        rec["flops_total"], rec["flops_per_layer"], rec["flops_fixed"] = fl
+        rec["bytes_total"], rec["bytes_per_layer"], rec["bytes_fixed"] = by
+        # collective bytes: probes give per-layer flat; full gives weighted
+        c2 = p2["collectives"]["flat_bytes"]
+        c4 = p4["collectives"]["flat_bytes"]
+        rec["coll_probe_total"] = max(
+            0.0, (c2 - 2 * (c4 - c2) / 2) + L * (c4 - c2) / 2)
+    else:
+        rec["flops_total"] = rec["bytes_total"] = None
+
+    rec["coll_bytes"] = full["collectives"]["weighted_bytes"]
+    rec["coll_counts"] = full["collectives"]["weighted_counts"]
+
+    if rec.get("flops_total"):
+        rec["compute_term_s"] = rec["flops_total"] / PEAK_FLOPS
+        rec["memory_term_s"] = rec["bytes_total"] / HBM_BW
+        rec["collective_term_s"] = rec["coll_bytes"] / ICI_BW
+        terms = {"compute": rec["compute_term_s"],
+                 "memory": rec["memory_term_s"],
+                 "collective": rec["collective_term_s"]}
+        rec["dominant"] = max(terms, key=terms.get)
+        mf = model_flops_per_device(arch, shape)
+        rec["model_flops"] = mf
+        rec["useful_ratio"] = mf / rec["flops_total"] if rec["flops_total"] \
+            else None
+        rec["roofline_fraction"] = (mf / PEAK_FLOPS) / max(terms.values())
+        rec["fits_hbm"] = (rec["peak_bytes"] or 0) + (rec["arg_bytes"] or 0) \
+            <= 16 * 1024**3
+    return rec
+
+
+def full_table():
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = cell_roofline(arch, shape)
+            if r is not None:
+                out.append(r)
+    return out
+
+
+def fmt_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful ratio | roofline frac | fits 16G |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r["status"] != "OK" or not r.get("flops_total"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']}: {r.get('reason','')[:60]} | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_term_s']:.3g} | "
+            f"{r['memory_term_s']:.3g} | {r['collective_term_s']:.3g} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = full_table()
+    os.makedirs(os.path.join(HERE, "..", "experiments"), exist_ok=True)
+    with open(os.path.join(HERE, "..", "experiments", "roofline.json"),
+              "w") as f:
+        json.dump(rows, f, indent=1)
+    print(fmt_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

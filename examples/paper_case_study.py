@@ -1,0 +1,42 @@
+"""Replay the paper's §5 experiments as case discussions.
+
+Prints the comprehensive optimization (constraint cases + chosen plans) for
+the paper's four test problems — matrix addition (Fig. 2), matmul
+(Fig. 3/4 + Table 1), 1D Jacobi (Fig. 7 + Table 2), matrix transposition
+(Fig. 8 + Table 3) — and then reproduces the *shape* of the paper's tables
+by sweeping program parameters with the offline performance model.
+
+    PYTHONPATH=src python examples/paper_case_study.py
+"""
+import numpy as np
+
+from repro.core import (PAPER_M2050, TPU_V5E, case_table, comprehensive_tree,
+                        enumerate_candidates, tree_report)
+from repro.kernels.jacobi1d import FAMILY as JACOBI
+from repro.kernels.matadd import FAMILY as MATADD
+from repro.kernels.matmul import FAMILY as MATMUL
+from repro.kernels.transpose import FAMILY as TRANSPOSE
+
+for family, datasets in [
+    (MATADD, [{"M": 1 << 10, "N": 1 << 10}, {"M": 1 << 13, "N": 1 << 13}]),
+    (MATMUL, [{"M": 1 << 10, "N": 1 << 10, "K": 1 << 10},
+              {"M": 1 << 11, "N": 1 << 11, "K": 1 << 11}]),   # Table 1 sizes
+    (JACOBI, [{"N": (1 << 15) + 2}]),                          # Table 2 size
+    (TRANSPOSE, [{"M": 1 << 14, "N": 1 << 14}]),               # Table 3 size
+]:
+    leaves = comprehensive_tree(family)
+    print("=" * 72)
+    print(f"{family.name}: {len(leaves)} cases in the comprehensive tree")
+    print(tree_report(leaves[:2]))
+    print("  ...")
+    for data, cand in case_table(family, TPU_V5E, datasets):
+        print(f"  input {data} -> {cand.describe()}")
+
+print("=" * 72)
+print("Paper Table-1 analogue: best matmul variant shifts with input size")
+for n in (1 << 10, 1 << 11):
+    cands = enumerate_candidates(MATMUL, TPU_V5E,
+                                 {"M": n, "N": n, "K": n})
+    cands.sort(key=lambda c: c.score, reverse=True)
+    print(f"  n=2^{int(np.log2(n))}: "
+          + " | ".join(c.describe() for c in cands[:3]))

@@ -1,0 +1,14 @@
+"""Continuous-batching serving demo (reduced config, real engine).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch yi-6b] [--requests 12]
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv += ["--arch", "yi-6b"]
+    sys.argv = [sys.argv[0], *argv]
+    serve.main()

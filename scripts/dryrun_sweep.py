@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Run the full dry-run sweep: every (arch x shape) x {16x16, 2x16x16} full
+lowering plus the L=2/L=4 roofline probes (single-pod).  One subprocess per
+cell (fresh XLA device state; bounded memory); resumable — cells whose JSON
+already reports OK/SKIP are not re-run.
+
+    python scripts/dryrun_sweep.py [--only-missing] [--probes-only]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "experiments", "dryrun")
+
+ARCHS = ["hymba-1.5b", "yi-6b", "llama3-8b", "qwen1.5-4b", "granite-3-8b",
+         "whisper-large-v3", "kimi-k2-1t-a32b", "llama4-scout-17b-a16e",
+         "chameleon-34b", "mamba2-130m"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def done(tag: str) -> bool:
+    p = os.path.join(OUT, tag + ".json")
+    if not os.path.exists(p):
+        return False
+    try:
+        with open(p) as f:
+            return json.load(f).get("status") in ("OK", "SKIP")
+    except Exception:
+        return False
+
+
+def run(arch, shape, multi_pod=False, probe=None, timeout=1800):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}_{shape}_{mesh}" + (f"_probe{probe}" if probe else "")
+    if done(tag):
+        print(f"[skip] {tag}", flush=True)
+        return True
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if probe:
+        cmd += ["--probe-layers", str(probe)]
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    t0 = time.time()
+    try:
+        r = subprocess.run(cmd, env=env, timeout=timeout,
+                           capture_output=True, text=True)
+        out = (r.stdout + r.stderr).strip().splitlines()
+        msg = out[-1] if out else "(no output)"
+    except subprocess.TimeoutExpired:
+        msg = "TIMEOUT"
+    print(f"[{time.time()-t0:6.1f}s] {tag}: {msg[:160]}", flush=True)
+    return done(tag)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--probes-only", action="store_true")
+    ap.add_argument("--full-only", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    t0 = time.time()
+    fails = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            jobs = []
+            if not args.probes_only:
+                jobs.append(dict(multi_pod=False))
+                jobs.append(dict(multi_pod=True))
+            if not args.full_only:
+                jobs.append(dict(probe=2))
+                jobs.append(dict(probe=4))
+            for j in jobs:
+                ok = run(arch, shape, **j)
+                if not ok:
+                    fails.append((arch, shape, j))
+    print(f"\nsweep done in {(time.time()-t0)/60:.1f} min; "
+          f"{len(fails)} failures")
+    for f in fails:
+        print("FAIL:", f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Atomic, checksummed, async checkpointing."""
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

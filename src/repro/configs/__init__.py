@@ -1,0 +1,54 @@
+"""Assigned architecture registry: one module per arch (``--arch <id>``).
+
+Each module exports ``CONFIG`` (the exact published configuration) and
+``SMOKE`` (a reduced same-family configuration for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from ..models.config import ModelConfig
+
+ARCH_IDS = (
+    "hymba_1p5b",
+    "yi_6b",
+    "llama3_8b",
+    "qwen1p5_4b",
+    "granite_3_8b",
+    "whisper_large_v3",
+    "kimi_k2_1t_a32b",
+    "llama4_scout_17b_a16e",
+    "chameleon_34b",
+    "mamba2_130m",
+)
+
+# canonical external ids (task spec) -> module names
+ALIASES = {
+    "hymba-1.5b": "hymba_1p5b",
+    "yi-6b": "yi_6b",
+    "llama3-8b": "llama3_8b",
+    "qwen1.5-4b": "qwen1p5_4b",
+    "granite-3-8b": "granite_3_8b",
+    "whisper-large-v3": "whisper_large_v3",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "chameleon-34b": "chameleon_34b",
+    "mamba2-130m": "mamba2_130m",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch.replace("-", "_").replace(".", "p"))
+    mod = importlib.import_module(f".{mod_name}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch.replace("-", "_").replace(".", "p"))
+    mod = importlib.import_module(f".{mod_name}", __package__)
+    return mod.SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

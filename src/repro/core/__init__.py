@@ -1,0 +1,34 @@
+"""Comprehensive optimization of parametric kernels (the paper's contribution).
+
+Public API:
+
+- :mod:`repro.core.polynomial`    — exact multivariate polynomials over Q
+- :mod:`repro.core.constraints`   — semi-algebraic systems + consistency
+- :mod:`repro.core.params`        — machine/program/data parameter symbols
+- :mod:`repro.core.plan`          — kernel plans + the optimization quintuple
+- :mod:`repro.core.counters`      — resource/performance counters (f_i, g_i)
+- :mod:`repro.core.strategies`    — optimization strategies O_1..O_w
+- :mod:`repro.core.comprehensive` — Algorithms 1 & 2 (the decision tree)
+- :mod:`repro.core.select`        — load-time leaf selection + auto-tuning
+"""
+from .polynomial import Poly, V
+from .constraints import Constraint, ConstraintSystem, Rel, Verdict
+from .params import (MachineDescription, MACHINES, TPU_V5E, PAPER_M2050,
+                     ParamKind, ParamSymbol)
+from .plan import FamilySpec, KernelPlan, Leaf, ParamDomain, Quintuple
+from .counters import Counter, CounterKind, performance, resource
+from .strategies import Strategy, level_strategy, toggle_strategy
+from .comprehensive import (comprehensive_optimization, comprehensive_tree,
+                            initial_quintuple, optimize, tree_report)
+from .select import Candidate, best_variant, case_table, enumerate_candidates
+
+__all__ = [
+    "Poly", "V", "Constraint", "ConstraintSystem", "Rel", "Verdict",
+    "MachineDescription", "MACHINES", "TPU_V5E", "PAPER_M2050",
+    "ParamKind", "ParamSymbol", "FamilySpec", "KernelPlan", "Leaf",
+    "ParamDomain", "Quintuple", "Counter", "CounterKind", "performance",
+    "resource", "Strategy", "level_strategy", "toggle_strategy",
+    "comprehensive_optimization", "comprehensive_tree", "initial_quintuple",
+    "optimize", "tree_report", "Candidate", "best_variant", "case_table",
+    "enumerate_candidates",
+]

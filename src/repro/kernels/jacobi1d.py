@@ -1,0 +1,158 @@
+"""Parametric 1D Jacobi stencil (paper Fig. 7, Table 2).
+
+The comprehensive tree reproduces the paper's three cases:
+
+  case 1:  2·s·B + 2 <= Z_B           cache(a) + grain s      (VMEM staged)
+  case 2:  2·B + 2 <= Z_B < 2·s·B+2   cache(a) + grain 1
+  case 3:  Z_B < 2·B + 2              no cache
+
+One time-iteration is one kernel launch (as in the paper, where the t-loop is
+outside meta_schedule).  The vector lives as a (1, n) 2D array so the lane
+dimension carries the stencil; each grid step produces a (1, B·s) output block
+from a (1, B·s+2) halo window read out of the full (VMEM-resident) input row.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.counters import Counter, performance, resource
+from ..core.plan import KernelPlan, ParamDomain
+from ..core.polynomial import Poly, V
+from ..core.strategies import Strategy
+
+DT = 4
+
+
+def _jacobi_kernel_cached(x_ref, o_ref, scratch_ref, *, bs: int):
+    i = pl.program_id(0)
+    base = i * bs
+    # stage the halo window (paper: cache(a) -> __shared__), then compute
+    scratch_ref[...] = x_ref[:, pl.dslice(base, bs + 2)]
+    w = scratch_ref[...]
+    o_ref[...] = (w[:, :-2] + w[:, 1:-1] + w[:, 2:]) / 3
+
+
+def _jacobi_kernel_uncached(x_ref, o_ref, *, bs: int):
+    i = pl.program_id(0)
+    base = i * bs
+    left = x_ref[:, pl.dslice(base, bs)]
+    mid = x_ref[:, pl.dslice(base + 1, bs)]
+    right = x_ref[:, pl.dslice(base + 2, bs)]
+    o_ref[...] = (left + mid + right) / 3
+
+
+def pallas_jacobi1d(x: jax.Array, steps: int, *, B: int, s: int,
+                    cached: bool = True, interpret: bool = False
+                    ) -> jax.Array:
+    """x: 1D array; fixed boundaries; ``steps`` time iterations."""
+    (n,) = x.shape
+    inner = n - 2
+    bs = B * s
+    n_blocks = -(-inner // bs)
+    pad = n_blocks * bs - inner
+    row = jnp.pad(x, (0, pad))[None, :]                    # (1, n+pad)
+
+    if cached:
+        kern = pl.pallas_call(
+            functools.partial(_jacobi_kernel_cached, bs=bs),
+            grid=(n_blocks,),
+            in_specs=[pl.BlockSpec((1, n + pad), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((1, bs), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((1, n_blocks * bs), x.dtype),
+            scratch_shapes=[pltpu.VMEM((1, bs + 2), x.dtype)],
+            interpret=interpret,
+        )
+    else:
+        kern = pl.pallas_call(
+            functools.partial(_jacobi_kernel_uncached, bs=bs),
+            grid=(n_blocks,),
+            in_specs=[pl.BlockSpec((1, n + pad), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((1, bs), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((1, n_blocks * bs), x.dtype),
+            interpret=interpret,
+        )
+
+    for _ in range(steps):                                  # paper's t-loop
+        interior = kern(row)[0, :inner]
+        row = row.at[0, 1:1 + inner].set(interior)
+    return row[0, :n]
+
+
+class Jacobi1dFamily:
+    name = "jacobi1d"
+
+    def initial_plan(self) -> KernelPlan:
+        return KernelPlan(
+            family=self.name,
+            flags={"vmem_cache": True, "granularity_level": 0},
+            program_params={
+                "B": ParamDomain("B", (128, 256, 512, 1024), align=128),
+                "s": ParamDomain("s", (1, 2, 4, 8)),
+            },
+        )
+
+    def counters(self) -> Sequence[Counter]:
+        return [
+            resource("vmem_bytes", "V", ("reduce_granularity", "uncache"),
+                     "paper: 2sB+2 shared words (Z_B)"),
+            resource("vreg_pressure", "G", (),
+                     "paper: 9 <= R_B in all three cases"),
+            performance("occupancy", "P_occ", ("reduce_granularity",)),
+        ]
+
+    def strategies(self) -> Sequence[Strategy]:
+        def reduce_granularity(plan: KernelPlan):
+            if plan.flags.get("granularity_level", 0) >= 1:
+                return None
+            p = plan.with_flag("granularity_level", 1, "reduce granularity")
+            p.program_params["s"] = ParamDomain("s", (1,))
+            return p
+
+        def uncache(plan: KernelPlan):
+            if not plan.flags.get("vmem_cache", True):
+                return None
+            return plan.with_flag("vmem_cache", False, "drop VMEM staging")
+
+        return [Strategy("reduce_granularity", reduce_granularity),
+                Strategy("uncache", uncache)]
+
+    def counter_value(self, plan: KernelPlan, counter: str
+                      ) -> Tuple[Poly, Poly]:
+        B, s = V("B"), V("s")
+        one = Poly.const(1)
+        if counter == "vmem_bytes":
+            if plan.flags.get("vmem_cache", True):
+                # paper's 2sB+2 words, in bytes (+ the output block)
+                return DT * (2 * B * s + 2) + DT * B * s, one
+            return DT * (2 * B + 2), one
+        if counter == "vreg_pressure":
+            return Poly.const(9), one
+        if counter == "occupancy":
+            return V("CORES") * B * s, V("N"),
+        raise KeyError(counter)
+
+    def score(self, plan: KernelPlan, v: Mapping[str, int]) -> float:
+        import math
+        B, s = v["B"], v["s"]
+        N = v.get("N", 1 << 15)
+        lane = v.get("LANE", 128)
+        fill = min(1.0, B / lane)
+        waves = math.ceil(N / (B * s)) / max(1, v.get("CORES", 1))
+        halo_overhead = (B * s) / (B * s + 2)
+        return fill * min(1.0, waves) * halo_overhead
+
+    def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
+                    interpret: bool = False) -> Callable:
+        return functools.partial(
+            pallas_jacobi1d, B=int(assignment["B"]), s=int(assignment["s"]),
+            cached=bool(plan.flags.get("vmem_cache", True)),
+            interpret=interpret)
+
+
+FAMILY = Jacobi1dFamily()

@@ -1,0 +1,129 @@
+"""Parametric matrix addition — the paper's introductory example (Fig. 1/2).
+
+The comprehensive tree for this family reproduces the paper's two-case
+discussion: the source plan has grain s=2 (each step writes the j and j+N/2
+halves, register estimate 14); the granularity-reduction strategy yields the
+single-element variant (register estimate 10), giving exactly
+
+    C1: { B0*B1 <= T,  14 <= R }          -> K1 (grain 2)
+    C2: { B0*B1 <= T,  10 <= R < 14 }     -> K2 (grain 1)
+
+with TPU names: T -> lane-tile budget, R -> G (vreg budget).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.counters import Counter, performance, resource
+from ..core.plan import KernelPlan, ParamDomain
+from ..core.polynomial import Poly, V
+from ..core.strategies import Strategy
+
+DT = 4  # f32 bytes
+
+
+def _add_kernel(a_ref, b_ref, o_ref, *, s: int, bn: int):
+    for t in range(s):                       # paper's grain (Fig. 2 K1: s=2)
+        sl = slice(t * bn, (t + 1) * bn)
+        o_ref[:, sl] = a_ref[:, sl] + b_ref[:, sl]
+
+
+def pallas_matadd(a: jax.Array, b: jax.Array, *, bm: int, bn: int, s: int,
+                  interpret: bool = False) -> jax.Array:
+    M, N = a.shape
+    bn_tot = bn * s
+    Mp, Np = -(-M // bm) * bm, -(-N // bn_tot) * bn_tot
+    a = jnp.pad(a, ((0, Mp - M), (0, Np - N)))
+    b = jnp.pad(b, ((0, Mp - M), (0, Np - N)))
+    out = pl.pallas_call(
+        functools.partial(_add_kernel, s=s, bn=bn),
+        grid=(Mp // bm, Np // bn_tot),
+        in_specs=[pl.BlockSpec((bm, bn_tot), lambda i, j: (i, j))] * 2,
+        out_specs=pl.BlockSpec((bm, bn_tot), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), a.dtype),
+        interpret=interpret,
+    )(a, b)
+    return out[:M, :N]
+
+
+class MataddFamily:
+    name = "matadd"
+
+    def initial_plan(self) -> KernelPlan:
+        return KernelPlan(
+            family=self.name,
+            flags={"granularity_level": 0, "cse_level": 0},
+            program_params={
+                "bm": ParamDomain("bm", (8, 16, 32, 64, 128, 256), align=8),
+                "bn": ParamDomain("bn", (128, 256, 512), align=128),
+                "s": ParamDomain("s", (2,)),     # paper source: two halves
+            },
+        )
+
+    def counters(self) -> Sequence[Counter]:
+        return [
+            resource("lane_tile", "T", (),
+                     "2D tile area per grid step (paper: threads/block)"),
+            resource("vreg_pressure", "G", ("reduce_granularity", "cse_1"),
+                     "paper's register estimate: 14 at s=2, 10 at s=1"),
+            resource("vmem_bytes", "V", ("reduce_granularity",)),
+            performance("occupancy", "P_occ", ("reduce_granularity",)),
+        ]
+
+    def strategies(self) -> Sequence[Strategy]:
+        def reduce_granularity(plan: KernelPlan):
+            if plan.flags.get("granularity_level", 0) >= 1:
+                return None
+            p = plan.with_flag("granularity_level", 1, "reduce granularity")
+            p.program_params["s"] = ParamDomain("s", (1,))
+            return p
+
+        def cse(plan: KernelPlan):
+            if plan.flags.get("cse_level", 0) >= 1:
+                return None
+            return plan.with_flag("cse_level", 1, "CSE on index arithmetic")
+
+        return [Strategy("reduce_granularity", reduce_granularity),
+                Strategy("cse_1", cse)]
+
+    def counter_value(self, plan: KernelPlan, counter: str
+                      ) -> Tuple[Poly, Poly]:
+        bm, bn, s = V("bm"), V("bn"), V("s")
+        one = Poly.const(1)
+        if counter == "lane_tile":
+            return bm * bn * s, one
+        if counter == "vreg_pressure":
+            # mirror the paper's IR estimates: grain 2 -> 14, grain 1 -> 10
+            g = plan.flags.get("granularity_level", 0)
+            c = plan.flags.get("cse_level", 0)
+            base = 14 if g == 0 else 10
+            return Poly.const(base - 2 * c), one
+        if counter == "vmem_bytes":
+            return 3 * DT * bm * bn * s * 2, one       # a,b,o double-buffered
+        if counter == "occupancy":
+            return V("CORES") * bm * bn * s, V("M") * V("N")
+        raise KeyError(counter)
+
+    def score(self, plan: KernelPlan, v: Mapping[str, int]) -> float:
+        import math
+        bm, bn, s = v["bm"], v["bn"], v["s"]
+        M = v.get("M", 4096); N = v.get("N", 4096)
+        lane = v.get("LANE", 128)
+        fill = min(1.0, bm / 8) * min(1.0, bn / lane)
+        waves = (math.ceil(M / bm) * math.ceil(N / (bn * s))) \
+            / max(1, v.get("CORES", 1))
+        return fill * min(1.0, waves) * min(1.0, (bm * bn * s) / 65536)
+
+    def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
+                    interpret: bool = False) -> Callable:
+        return functools.partial(
+            pallas_matadd, bm=int(assignment["bm"]), bn=int(assignment["bn"]),
+            s=int(assignment["s"]), interpret=interpret)
+
+
+FAMILY = MataddFamily()

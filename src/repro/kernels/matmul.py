@@ -1,0 +1,239 @@
+"""Parametric blocked matmul — the paper's flagship kernel (Fig. 3/4, Table 1).
+
+GPU→TPU mapping (DESIGN.md §2): the paper's thread-block format ``B0 × ub1``
+with grain ``s`` (coefficients per thread) becomes a Pallas ``BlockSpec`` tile
+``bm × (s·bn)`` with grain ``s`` (bn-wide MXU sub-tiles per grid step); the
+``__shared__`` staging of A/B blocks becomes VMEM staging with an explicit f32
+accumulator scratch (``cached``) versus output-block accumulation
+(``uncached``).
+
+Program parameters:  bm, bn, bk, s   (all symbolic during tree construction)
+Data parameters:     M, N, K
+Machine parameters:  V (VMEM bytes), G (vreg budget), CORES, MXU
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.counters import Counter, performance, resource
+from ..core.plan import KernelPlan, ParamDomain
+from ..core.polynomial import Poly, V
+from ..core.strategies import Strategy
+
+DIN = 2      # bf16 input bytes
+DACC = 4     # f32 accumulator bytes
+
+
+# =============================================================================
+# Pallas kernels (one per comprehensive-tree leaf shape)
+# =============================================================================
+
+def _mm_kernel_cached(a_ref, b_ref, o_ref, acc_ref, *, s: int, bn: int,
+                      nk: int):
+    """VMEM-cached variant: f32 scratch accumulator, grain loop over s."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)                      # (bm, bk)
+    for t in range(s):                                      # paper's grain s
+        acc_ref[:, t * bn:(t + 1) * bn] += jnp.dot(
+            a, b_ref[:, t * bn:(t + 1) * bn].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _mm_kernel_uncached(a_ref, b_ref, o_ref, *, s: int, bn: int, nk: int):
+    """Uncached variant: accumulate straight into the (f32) output block."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    for t in range(s):
+        o_ref[:, t * bn:(t + 1) * bn] += jnp.dot(
+            a, b_ref[:, t * bn:(t + 1) * bn].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+
+def pallas_matmul(a: jax.Array, b: jax.Array, *, bm: int, bn: int, bk: int,
+                  s: int, cached: bool = True, interpret: bool = False
+                  ) -> jax.Array:
+    """C[M,N] = A[M,K] @ B[K,N] with parametric blocking (pads to tiles)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bn_tot = bn * s
+    Mp = -(-M // bm) * bm
+    Np = -(-N // bn_tot) * bn_tot
+    Kp = -(-K // bk) * bk
+    a = jnp.pad(a, ((0, Mp - M), (0, Kp - K)))
+    b = jnp.pad(b, ((0, Kp - K), (0, Np - N)))
+    grid = (Mp // bm, Np // bn_tot, Kp // bk)
+
+    common = dict(
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn_tot), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn_tot), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )
+    if cached:
+        out = pl.pallas_call(
+            functools.partial(_mm_kernel_cached, s=s, bn=bn, nk=grid[2]),
+            scratch_shapes=[pltpu.VMEM((bm, bn_tot), jnp.float32)],
+            **common,
+        )(a, b)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_mm_kernel_uncached, s=s, bn=bn, nk=grid[2]),
+            **common,
+        )(a, b)
+    return out[:M, :N]
+
+
+# =============================================================================
+# FamilySpec — symbolic counters + strategies for the comprehensive tree
+# =============================================================================
+
+_S_DOMAIN_BY_LEVEL = {0: (1, 2, 4, 8), 1: (1, 2)}
+
+
+class MatmulFamily:
+    name = "matmul"
+
+    def initial_plan(self) -> KernelPlan:
+        return KernelPlan(
+            family=self.name,
+            flags={"vmem_cache": True, "granularity_level": 0,
+                   "pressure_level": 0, "cse_level": 0},
+            program_params={
+                "bm": ParamDomain("bm", (8, 16, 32, 64, 128, 256), align=8),
+                "bn": ParamDomain("bn", (128, 256, 512), align=128),
+                "bk": ParamDomain("bk", (128, 256, 512), align=128),
+                "s": ParamDomain("s", _S_DOMAIN_BY_LEVEL[0]),
+            },
+        )
+
+    # -- counters (order: resources r_i first, then performance p_i) ---------
+    def counters(self) -> Sequence[Counter]:
+        return [
+            resource("vmem_bytes", "V",
+                     ("reduce_granularity", "uncache"),
+                     "VMEM working set per grid step (paper: Z_B)"),
+            resource("vreg_pressure", "G",
+                     ("pressure_1", "pressure_2", "pressure_3",
+                      "cse_1", "cse_2"),
+                     "live lane-values per grid step (paper: registers R)"),
+            performance("occupancy", "P_occ", ("reduce_granularity",),
+                        "cores per grid step (paper: SM occupancy)"),
+            performance("mxu_util", "P_mxu", (),
+                        "MXU systolic tile fill ratio"),
+        ]
+
+    # -- strategies O_1..O_w (paper §5: 4 kinds; 3 pressure + 2 cse levels) --
+    def strategies(self) -> Sequence[Strategy]:
+        def reduce_granularity(plan: KernelPlan):
+            lvl = plan.flags.get("granularity_level", 0)
+            if lvl >= 1:
+                return None
+            p = plan.with_flag("granularity_level", 1, "reduce granularity")
+            p.program_params["s"] = ParamDomain("s", _S_DOMAIN_BY_LEVEL[1])
+            return p
+
+        def uncache(plan: KernelPlan):
+            if not plan.flags.get("vmem_cache", True):
+                return None
+            return plan.with_flag("vmem_cache", False, "drop VMEM staging")
+
+        def pressure(level):
+            def apply(plan: KernelPlan):
+                if plan.flags.get("pressure_level", 0) >= level:
+                    return None
+                return plan.with_flag("pressure_level", level,
+                                      f"split accumulator L{level}")
+            return apply
+
+        def cse(level):
+            def apply(plan: KernelPlan):
+                if plan.flags.get("cse_level", 0) >= level:
+                    return None
+                return plan.with_flag("cse_level", level, f"CSE L{level}")
+            return apply
+
+        return [
+            Strategy("reduce_granularity", reduce_granularity),
+            Strategy("uncache", uncache),
+            Strategy("pressure_1", pressure(1)),
+            Strategy("pressure_2", pressure(2)),
+            Strategy("pressure_3", pressure(3)),
+            Strategy("cse_1", cse(1)),
+            Strategy("cse_2", cse(2)),
+        ]
+
+    # -- symbolic counter evaluation (paper §3.3: f_i, g_i) -------------------
+    def counter_value(self, plan: KernelPlan, counter: str
+                      ) -> Tuple[Poly, Poly]:
+        bm, bn, bk, s = V("bm"), V("bn"), V("bk"), V("s")
+        one = Poly.const(1)
+        if counter == "vmem_bytes":
+            streamed = 2 * DIN * (bm * bk + bk * bn * s)   # double-buffered
+            outblk = DACC * bm * bn * s
+            if plan.flags.get("vmem_cache", True):
+                return streamed + outblk + DACC * bm * bn * s, one
+            return streamed + outblk, one
+        if counter == "vreg_pressure":
+            p = plan.flags.get("pressure_level", 0)
+            c = plan.flags.get("cse_level", 0)
+            acc_tiles = bm * bn * s / (8 * 128 * (2 ** p))
+            index_regs = Poly.const(12 - 3 * c)
+            return acc_tiles + index_regs, one
+        if counter == "occupancy":
+            return V("CORES") * bm * bn * s, V("M") * V("N")
+        if counter == "mxu_util":
+            return bm * bn, V("MXU") * V("MXU")
+        raise KeyError(counter)
+
+    # -- offline ranking model (napkin math over the v5e datapath) -----------
+    def score(self, plan: KernelPlan, v: Mapping[str, int]) -> float:
+        import math
+        bm, bn, bk, s = v["bm"], v["bn"], v["bk"], v["s"]
+        M = v.get("M", 4096); N = v.get("N", 4096)
+        mxu = v.get("MXU", 128)
+        cores = max(1, v.get("CORES", 1))
+        bns = bn * s
+        fill = min(1.0, bm / mxu) * min(1.0, bn / mxu)   # MXU tile fill
+        ai = (bm * bns) / (bm + bns)                      # tile FLOP/byte reuse
+        ai_norm = min(1.0, ai / 256.0)
+        waves = (math.ceil(M / bm) * math.ceil(N / bns)) / cores
+        wave_eff = min(1.0, waves)                        # enough parallelism
+        kamort = min(1.0, bk / 512)                       # fewer k revisits
+        return fill * ai_norm * wave_eff * (0.5 + 0.5 * kamort)
+
+    # -- instantiation --------------------------------------------------------
+    def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
+                    interpret: bool = False) -> Callable:
+        bm, bn = int(assignment["bm"]), int(assignment["bn"])
+        bk, s = int(assignment["bk"]), int(assignment["s"])
+        cached = bool(plan.flags.get("vmem_cache", True))
+        return functools.partial(pallas_matmul, bm=bm, bn=bn, bk=bk, s=s,
+                                 cached=cached, interpret=interpret)
+
+
+FAMILY = MatmulFamily()

@@ -1,0 +1,145 @@
+"""Public jit'd wrappers: every call goes through the comprehensive tree.
+
+``impl`` resolution:
+  "pallas"  — instantiate the selected leaf's Pallas kernel (TPU target; on
+              CPU pass ``interpret=True``, which tests do).
+  "xla"     — the pure-jnp oracle path (used by the model stack on the CPU
+              container and by the dry-run, where Pallas cannot lower).
+  "auto"    — pallas on TPU backends, xla elsewhere.
+
+The *selection* (which leaf, which block sizes) is identical for both impls,
+so CPU tests exercise the same decision path the TPU build would take.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.params import MachineDescription, TPU_V5E
+from ..core.select import Candidate, best_variant
+from . import ref
+from .flash_attention import FAMILY as FLASH_FAMILY
+from .jacobi1d import FAMILY as JACOBI_FAMILY
+from .matadd import FAMILY as MATADD_FAMILY
+from .matmul import FAMILY as MATMUL_FAMILY
+from .ssd_scan import FAMILY as SSD_FAMILY
+from .transpose import FAMILY as TRANSPOSE_FAMILY
+
+FAMILIES = {f.name: f for f in (MATMUL_FAMILY, MATADD_FAMILY, JACOBI_FAMILY,
+                                TRANSPOSE_FAMILY, FLASH_FAMILY, SSD_FAMILY)}
+
+
+def _resolve_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+@functools.lru_cache(maxsize=512)
+def _select(family_name: str, machine_name: str, data_items) -> Candidate:
+    machine = (TPU_V5E if machine_name == TPU_V5E.name
+               else __import__("repro.core.params", fromlist=["MACHINES"]
+                               ).MACHINES[machine_name])
+    return best_variant(FAMILIES[family_name], machine, dict(data_items))
+
+
+def select(family_name: str, data: Mapping[str, int],
+           machine: MachineDescription = TPU_V5E) -> Candidate:
+    return _select(family_name, machine.name, tuple(sorted(data.items())))
+
+
+# -- matmul -------------------------------------------------------------------
+
+def matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
+           machine: MachineDescription = TPU_V5E,
+           interpret: bool = False) -> jax.Array:
+    impl = _resolve_impl(impl)
+    if impl == "xla":
+        return ref.matmul(a, b)
+    M, K = a.shape
+    N = b.shape[1]
+    cand = select("matmul", {"M": M, "N": N, "K": K}, machine)
+    fn = MATMUL_FAMILY.instantiate(cand.plan, cand.assignment,
+                                   interpret=interpret)
+    return fn(a, b)
+
+
+# -- matadd -------------------------------------------------------------------
+
+def matadd(a: jax.Array, b: jax.Array, *, impl: str = "auto",
+           machine: MachineDescription = TPU_V5E,
+           interpret: bool = False) -> jax.Array:
+    impl = _resolve_impl(impl)
+    if impl == "xla":
+        return ref.matadd(a, b)
+    M, N = a.shape
+    cand = select("matadd", {"M": M, "N": N}, machine)
+    fn = MATADD_FAMILY.instantiate(cand.plan, cand.assignment,
+                                   interpret=interpret)
+    return fn(a, b)
+
+
+# -- jacobi1d -------------------------------------------------------------------
+
+def jacobi1d(x: jax.Array, steps: int, *, impl: str = "auto",
+             machine: MachineDescription = TPU_V5E,
+             interpret: bool = False) -> jax.Array:
+    impl = _resolve_impl(impl)
+    if impl == "xla":
+        return ref.jacobi1d(x, steps)
+    (n,) = x.shape
+    cand = select("jacobi1d", {"N": n}, machine)
+    fn = JACOBI_FAMILY.instantiate(cand.plan, cand.assignment,
+                                   interpret=interpret)
+    return fn(x, steps)
+
+
+# -- transpose -----------------------------------------------------------------
+
+def transpose(a: jax.Array, *, impl: str = "auto",
+              machine: MachineDescription = TPU_V5E,
+              interpret: bool = False) -> jax.Array:
+    impl = _resolve_impl(impl)
+    if impl == "xla":
+        return ref.transpose(a)
+    M, N = a.shape
+    cand = select("transpose", {"M": M, "N": N}, machine)
+    fn = TRANSPOSE_FAMILY.instantiate(cand.plan, cand.assignment,
+                                      interpret=interpret)
+    return fn(a)
+
+
+# -- flash attention -----------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    impl: str = "auto",
+                    machine: MachineDescription = TPU_V5E,
+                    interpret: bool = False) -> jax.Array:
+    impl = _resolve_impl(impl)
+    if impl == "xla":
+        return ref.flash_attention(q, k, v, causal=causal, window=window)
+    h, sq, d = q.shape
+    cand = select("flash_attention", {"SQ": sq, "HD": d}, machine)
+    fn = FLASH_FAMILY.instantiate(cand.plan, cand.assignment,
+                                  interpret=interpret)
+    return fn(q, k, v, causal=causal, window=window)
+
+
+# -- SSD scan --------------------------------------------------------------------
+
+def ssd_scan(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
+             impl: str = "auto", machine: MachineDescription = TPU_V5E,
+             interpret: bool = False) -> jax.Array:
+    impl = _resolve_impl(impl)
+    if impl == "xla":
+        return ref.ssd_scan(x, a, b, c)
+    seq, heads, hd = x.shape
+    state = b.shape[-1]
+    cand = select("ssd_scan", {"SQ": seq, "HD": hd, "STATE": state}, machine)
+    fn = SSD_FAMILY.instantiate(cand.plan, cand.assignment,
+                                interpret=interpret)
+    return fn(x, a, b, c)

@@ -1,0 +1,154 @@
+"""Parametric matrix transposition (paper Fig. 8, Table 3).
+
+The comprehensive tree reproduces the paper's three-case discussion:
+
+  case 1:  2·s·B0·B1 <= Z_B            cache + full grain      (VMEM staged)
+  case 2:  2·B0·B1 <= Z_B < 2·s·B0·B1  cache + reduced grain
+  case 3:  Z_B < 2·B0·B1               no cache                (direct copy)
+
+with Z_B -> V (VMEM bytes).  The cached variant stages the input tile in a
+VMEM scratch and writes the transposed tile out (on GPU this is the classic
+shared-memory-bank transpose; on TPU it keeps the relayout inside VMEM where
+the copy-transpose unit operates on (8,128) tiles).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.counters import Counter, performance, resource
+from ..core.plan import KernelPlan, ParamDomain
+from ..core.polynomial import Poly, V
+from ..core.strategies import Strategy
+
+DT = 4
+
+
+def _tr_kernel_cached(a_ref, o_ref, scratch_ref, *, s: int, bn: int):
+    for t in range(s):                          # grain loop (paper's k loop)
+        sl = slice(t * bn, (t + 1) * bn)
+        scratch_ref[sl, :] = a_ref[:, sl].T
+    o_ref[...] = scratch_ref[...]
+
+
+def _tr_kernel_uncached(a_ref, o_ref, *, s: int, bn: int):
+    for t in range(s):
+        sl = slice(t * bn, (t + 1) * bn)
+        o_ref[sl, :] = a_ref[:, sl].T
+
+
+def pallas_transpose(a: jax.Array, *, bm: int, bn: int, s: int,
+                     cached: bool = True, interpret: bool = False
+                     ) -> jax.Array:
+    M, N = a.shape
+    bn_tot = bn * s
+    Mp, Np = -(-M // bm) * bm, -(-N // bn_tot) * bn_tot
+    a = jnp.pad(a, ((0, Mp - M), (0, Np - N)))
+    common = dict(
+        grid=(Mp // bm, Np // bn_tot),
+        in_specs=[pl.BlockSpec((bm, bn_tot), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bn_tot, bm), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((Np, Mp), a.dtype),
+        interpret=interpret,
+    )
+    if cached:
+        out = pl.pallas_call(
+            functools.partial(_tr_kernel_cached, s=s, bn=bn),
+            scratch_shapes=[pltpu.VMEM((bn_tot, bm), a.dtype)],
+            **common)(a)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_tr_kernel_uncached, s=s, bn=bn),
+            **common)(a)
+    return out[:N, :M]
+
+
+class TransposeFamily:
+    name = "transpose"
+
+    def initial_plan(self) -> KernelPlan:
+        return KernelPlan(
+            family=self.name,
+            flags={"vmem_cache": True, "granularity_level": 0, "cse_level": 0},
+            program_params={
+                "bm": ParamDomain("bm", (8, 16, 32, 64, 128, 256), align=8),
+                "bn": ParamDomain("bn", (128, 256), align=128),
+                "s": ParamDomain("s", (1, 2, 4, 8)),
+            },
+        )
+
+    def counters(self) -> Sequence[Counter]:
+        return [
+            resource("vmem_bytes", "V", ("reduce_granularity", "uncache"),
+                     "paper: 2*s*B0*B1 words of shared memory (Z_B)"),
+            resource("vreg_pressure", "G", ("cse_1", "cse_2"),
+                     "paper: 6 at source, 5 after CSE"),
+            performance("occupancy", "P_occ", ("reduce_granularity",)),
+        ]
+
+    def strategies(self) -> Sequence[Strategy]:
+        def reduce_granularity(plan: KernelPlan):
+            if plan.flags.get("granularity_level", 0) >= 1:
+                return None
+            p = plan.with_flag("granularity_level", 1, "reduce granularity")
+            p.program_params["s"] = ParamDomain("s", (1,))
+            return p
+
+        def uncache(plan: KernelPlan):
+            if not plan.flags.get("vmem_cache", True):
+                return None
+            return plan.with_flag("vmem_cache", False, "drop VMEM staging")
+
+        def cse(level):
+            def apply(plan: KernelPlan):
+                if plan.flags.get("cse_level", 0) >= level:
+                    return None
+                return plan.with_flag("cse_level", level, f"CSE L{level}")
+            return apply
+
+        return [Strategy("reduce_granularity", reduce_granularity),
+                Strategy("uncache", uncache),
+                Strategy("cse_1", cse(1)), Strategy("cse_2", cse(2))]
+
+    def counter_value(self, plan: KernelPlan, counter: str
+                      ) -> Tuple[Poly, Poly]:
+        bm, bn, s = V("bm"), V("bn"), V("s")
+        one = Poly.const(1)
+        if counter == "vmem_bytes":
+            io = 2 * DT * bm * bn * s                   # in + out blocks
+            if plan.flags.get("vmem_cache", True):
+                return io + DT * bm * bn * s, one       # + scratch (paper 2sB0B1)
+            return io, one
+        if counter == "vreg_pressure":
+            c = plan.flags.get("cse_level", 0)
+            return Poly.const(6 - min(c, 1)), one       # paper: 6 -> 5
+        if counter == "occupancy":
+            return V("CORES") * bm * bn * s, V("M") * V("N")
+        raise KeyError(counter)
+
+    def score(self, plan: KernelPlan, v: Mapping[str, int]) -> float:
+        import math
+        bm, bn, s = v["bm"], v["bn"], v["s"]
+        M = v.get("M", 4096); N = v.get("N", 4096)
+        # transposes love square-ish tiles that fill (8,128) vregs both ways
+        fill = min(1.0, bm / 128) * min(1.0, bn / 128)
+        balance = min(bm, bn * s) / max(bm, bn * s)
+        waves = (math.ceil(M / bm) * math.ceil(N / (bn * s))) \
+            / max(1, v.get("CORES", 1))
+        return fill * balance * min(1.0, waves)
+
+    def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
+                    interpret: bool = False) -> Callable:
+        return functools.partial(
+            pallas_transpose, bm=int(assignment["bm"]),
+            bn=int(assignment["bn"]), s=int(assignment["s"]),
+            cached=bool(plan.flags.get("vmem_cache", True)),
+            interpret=interpret)
+
+
+FAMILY = TransposeFamily()

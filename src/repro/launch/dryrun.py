@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run driver (deliverable e) + roofline extraction (g).
+
+MUST be run as ``python -m repro.launch.dryrun`` — the XLA_FLAGS line above
+executes before any other import so the 512 placeholder devices exist when
+jax initializes.  Per (arch × shape × mesh) cell it:
+
+1. builds abstract params/optimizer/batch specs (ShapeDtypeStruct only),
+2. ``jax.jit(step).lower(...)`` then ``.compile()`` on the production mesh,
+3. records ``memory_analysis()`` / ``cost_analysis()`` / the collective
+   schedule parsed from the partitioned HLO,
+4. optionally lowers the *unrolled L=2 probe* of the same cell so the
+   roofline can separate fixed vs per-layer cost (cost_analysis counts a
+   while body once; see DESIGN.md §8),
+5. writes one JSON per cell under experiments/dryrun/.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all            # every non-skipped cell
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALIASES, ARCH_IDS, get_config
+from repro.distributed import sharding as dist
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_state, batch_entry, cache_specs,
+                                default_microbatches, grad_dtype_for,
+                                probe_config, skip_reason, state_shardings,
+                                train_batch_specs)
+from repro.models.config import SHAPES_BY_NAME
+from repro.optim import make_optimizer, warmup_cosine
+from repro.runtime.steps import build_serve_steps, build_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# TPU v5e constants (task spec)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def _optimizer_for(cfg):
+    return make_optimizer(cfg.optimizer, warmup_cosine(3e-4, 100, 10_000))
+
+
+def _np(x):
+    return None if x is None else float(x)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               probe_layers: Optional[int] = None,
+               keep_hlo: bool = False,
+               overrides: Optional[Dict[str, Any]] = None,
+               microbatches: Optional[int] = None,
+               zero2_acc: bool = False,
+               tag: str = "") -> Dict[str, Any]:
+    """Lower + compile one cell; return the roofline-relevant record.
+
+    ``overrides`` patches ModelConfig fields (perf_flags, remat, ...);
+    ``microbatches``/``zero2_acc`` patch the train-step build — together
+    these are the §Perf hillclimb knobs."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "probe_layers": probe_layers,
+    }
+    skip = skip_reason(cfg, shape)
+    if skip:
+        rec["status"] = "SKIP"
+        rec["skip_reason"] = skip
+        return rec
+
+    if probe_layers is not None:
+        cfg = probe_config(cfg, probe_layers)
+        # probes unroll every loop so cost_analysis sees each body
+        from repro.models import layers as model_layers
+        model_layers.set_unroll_inner(True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rules = dist.rules_for(cfg, mesh)
+    t0 = time.time()
+
+    with mesh, dist.use_mesh_rules(mesh, rules):
+        if shape.kind == "train":
+            opt = _optimizer_for(cfg)
+            params_sds, axes, opt_sds = abstract_state(cfg, opt)
+            p_sh, o_sh, _ = state_shardings(cfg, mesh, params_sds, axes,
+                                            opt_sds)
+            batch_sds, batch_sh = train_batch_specs(cfg, shape, mesh)
+            # probes use one microbatch: the roofline reconstruction is
+            # total = mb_real x (fixed + L x per_layer); see benchmarks/roofline
+            mb = 1 if probe_layers is not None else \
+                (microbatches or default_microbatches(cfg, shape, mesh))
+            rec["microbatches"] = mb
+            acc_sh = None
+            if zero2_acc:
+                from repro.launch.specs import _zero1_one
+                acc_sh = jax.tree.map(
+                    lambda sh, sds: _zero1_one(sh, sds, mesh),
+                    p_sh, params_sds,
+                    is_leaf=lambda t: hasattr(t, "spec"))
+                rec["zero2_acc"] = True
+            step_fn = build_train_step(
+                cfg, opt, microbatches=mb, grad_dtype=grad_dtype_for(cfg),
+                unroll=probe_layers is not None, acc_shardings=acc_sh)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, o_sh, batch_sh, None),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(
+                params_sds, opt_sds, batch_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        else:
+            params_sds, axes, _ = abstract_state(cfg, None)
+            p_sh, _, _ = state_shardings(cfg, mesh, params_sds, axes, None)
+            GB, S = shape.global_batch, shape.seq_len
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            bentry = batch_entry(mesh, GB)
+            prefill_step, decode_step = build_serve_steps(
+                cfg, unroll=probe_layers is not None)
+            if shape.kind == "prefill":
+                c_sds, c_sh = cache_specs(cfg, GB, S, mesh)
+                tok = jax.ShapeDtypeStruct((GB, S), jnp.int32)
+                tok_sh = NamedSharding(mesh, P(bentry, None))
+                if cfg.encoder is not None:
+                    enc_sds = jax.ShapeDtypeStruct(
+                        (GB, cfg.encoder.seq_len, cfg.d_model), jnp.bfloat16)
+                    enc_sh = NamedSharding(mesh, P(bentry, None, None))
+                    fn = (lambda p, t, c, e:
+                          prefill_step(p, t, c, enc_embeds=e))
+                    jitted = jax.jit(
+                        fn, in_shardings=(p_sh, tok_sh, c_sh, enc_sh),
+                        out_shardings=(None, c_sh))
+                    lowered = jitted.lower(params_sds, tok, c_sds, enc_sds)
+                else:
+                    jitted = jax.jit(
+                        prefill_step,
+                        in_shardings=(p_sh, tok_sh, c_sh),
+                        out_shardings=(None, c_sh))
+                    lowered = jitted.lower(params_sds, tok, c_sds)
+            else:  # decode
+                c_sds, c_sh = cache_specs(cfg, GB, S, mesh)
+                tok = jax.ShapeDtypeStruct((GB, 1), jnp.int32)
+                tok_sh = NamedSharding(mesh, P(bentry, None))
+                idx = jax.ShapeDtypeStruct((), jnp.int32)
+                jitted = jax.jit(
+                    decode_step,
+                    in_shardings=(p_sh, tok_sh, c_sh, None),
+                    out_shardings=(None, c_sh),
+                    donate_argnums=(2,))
+                lowered = jitted.lower(params_sds, tok, c_sds, idx)
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    rec["status"] = "OK"
+    rec["devices"] = n_dev
+    rec["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        "generated_code_bytes": getattr(
+            mem, "generated_code_size_in_bytes", None),
+    }
+    rec["cost"] = {
+        "flops": _np(cost.get("flops")),
+        "bytes_accessed": _np(cost.get("bytes accessed")),
+        "transcendentals": _np(cost.get("transcendentals")),
+    }
+    hlo = compiled.as_text()
+    rep = hlo_analysis.collective_report(hlo, n_dev)
+    rec["collectives"] = rep.summary()
+    if keep_hlo:
+        rec["hlo_len"] = len(hlo)
+        os.makedirs(OUT_DIR, exist_ok=True)
+        with open(os.path.join(
+                OUT_DIR, f"{arch}_{shape_name}_{rec['mesh']}"
+                f"{'_probe' + str(probe_layers) if probe_layers else ''}"
+                f"{('_' + tag) if tag else ''}.hlo.txt"), "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             probe_layers: Optional[int], keep_hlo: bool,
+             overrides: Optional[Dict[str, Any]] = None,
+             microbatches: Optional[int] = None,
+             zero2_acc: bool = False,
+             tag: str = "") -> Dict[str, Any]:
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                         probe_layers=probe_layers, keep_hlo=keep_hlo,
+                         overrides=overrides, microbatches=microbatches,
+                         zero2_acc=zero2_acc, tag=tag)
+    except Exception as e:                                    # noqa: BLE001
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "probe_layers": probe_layers,
+               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    if overrides:
+        rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    fname = (f"{arch}_{shape_name}_{rec['mesh']}"
+             f"{'_probe' + str(probe_layers) if probe_layers else ''}"
+             f"{('_' + tag) if tag else ''}")
+    with open(os.path.join(OUT_DIR, fname + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--probe-layers", type=int, default=None)
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    # §Perf hillclimb knobs
+    ap.add_argument("--perf-flags", type=str, default=None,
+                    help="comma list: attn_q_heads,rope_compute,probs_bf16")
+    ap.add_argument("--remat", type=str, default=None)
+    ap.add_argument("--param-dtype", type=str, default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--zero2-acc", action="store_true")
+    ap.add_argument("--tag", type=str, default="",
+                    help="suffix for the output JSON (variant runs)")
+    args = ap.parse_args()
+
+    overrides: Dict[str, Any] = {}
+    if args.perf_flags is not None:
+        overrides["perf_flags"] = tuple(
+            f for f in args.perf_flags.split(",") if f)
+    if args.remat is not None:
+        overrides["remat"] = args.remat
+    if args.param_dtype is not None:
+        overrides["param_dtype"] = args.param_dtype
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in ("train_4k", "prefill_32k", "decode_32k",
+                          "long_500k"):
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, args.multi_pod, args.probe_layers,
+                       args.keep_hlo, overrides=overrides or None,
+                       microbatches=args.microbatches,
+                       zero2_acc=args.zero2_acc, tag=args.tag)
+        status = rec["status"]
+        extra = ""
+        if status == "OK":
+            extra = (f" compile={rec['compile_s']}s "
+                     f"flops={rec['cost']['flops']:.3g} "
+                     f"coll={rec['collectives']['weighted_bytes']:.3g}B")
+        elif status == "FAIL":
+            extra = " " + rec["error"][:160]
+        print(f"[{status}] {arch} {shape} {rec['mesh']}"
+              f"{' probe' + str(args.probe_layers) if args.probe_layers else ''}"
+              f"{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

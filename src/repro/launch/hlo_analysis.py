@@ -1,0 +1,256 @@
+"""Post-SPMD HLO analysis: collective bytes, op counts, loop-weighted totals.
+
+``cost_analysis`` does not expose collective traffic, so we parse the
+partitioned HLO text (``compiled.as_text()``):
+
+1. split the module into named computations;
+2. find every all-reduce / all-gather / reduce-scatter / all-to-all /
+   collective-permute (sync or ``-start`` async form) and compute the bytes
+   it moves per device from its result shape, its replica-group size and the
+   standard ring-algorithm cost model;
+3. propagate loop multipliers: a collective inside a ``while`` body (our
+   layer scan / microbatch scan) executes trip-count times.  Trip counts are
+   recovered from the loop-condition's compare constant.
+
+Two totals are returned: ``flat`` (each op once — used by the finite
+difference probes) and ``weighted`` (loop-aware — used for the full scan
+lowering).  tests/test_hlo_analysis.py checks both on hand-built modules.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f4e2m1fn": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+_CALL_RE = re.compile(r"(?:calls|to_apply|branch_computations)="
+                      r"\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,\s]+)\}")
+# iota form: replica_groups=[G,n]<=[...] (optionally with T(perm)): n per group
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[[0-9,]+\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its body lines.
+
+    Computation headers sit at column 0 and end with ``{``; instructions are
+    indented; the closing ``}`` is at column 0.  (Metadata tables at the top
+    of scheduled modules put ``{...}`` on one line — excluded by requiring
+    the trailing ``{``.)
+    """
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            s = line.rstrip()
+            if not line.startswith(" ") and s.endswith("{") and "(" in s:
+                name = s.split()[1] if s.startswith("ENTRY") else s.split()[0]
+                name = name.lstrip("%")
+                # strip a trailing parameter list glued to the name
+                name = name.split("(")[0]
+                cur = name
+                comps[cur] = []
+        else:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line.strip())
+    return comps
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    if _SRC_TGT_RE.search(line):
+        return 2                       # collective-permute: pairwise hop
+    return total_devices
+
+
+def _op_bytes(op: str, out_bytes: int, n: int) -> int:
+    """Per-device bytes moved, ring-algorithm model.
+
+    out_bytes is the result-shape size per device.
+      all-reduce       2(n-1)/n * size        (size = out)
+      all-gather       (n-1)/n * out          (out is the gathered tensor)
+      reduce-scatter   (n-1) * out            (input = n * out shards)
+      all-to-all       (n-1)/n * out
+      collective-permute  out
+    """
+    if n <= 1:
+        return 0
+    if op == "all-reduce":
+        return int(2 * (n - 1) / n * out_bytes)
+    if op == "all-gather":
+        return int((n - 1) / n * out_bytes)
+    if op == "reduce-scatter":
+        return int((n - 1) * out_bytes)
+    if op == "all-to-all":
+        return int((n - 1) / n * out_bytes)
+    return out_bytes   # collective-permute
+
+
+# op spot + async variants; result type is everything left of the match
+_COLL_RE = re.compile(
+    r"\s(" + "|".join(COLLECTIVE_OPS) + r")(-start)?\(")
+
+
+@dataclass
+class CollectiveReport:
+    flat_bytes: int = 0
+    weighted_bytes: int = 0
+    counts: Dict[str, int] = field(default_factory=dict)
+    weighted_counts: Dict[str, float] = field(default_factory=dict)
+    by_comp: Dict[str, int] = field(default_factory=dict)
+
+    def summary(self) -> Dict:
+        return {"flat_bytes": self.flat_bytes,
+                "weighted_bytes": self.weighted_bytes,
+                "counts": dict(self.counts),
+                "weighted_counts": dict(self.weighted_counts)}
+
+
+def _trip_count(line: str, comps: Dict[str, List[str]], cond: str) -> int:
+    """Loop trip count: XLA's known_trip_count when present, else the
+    largest compare constant in the loop condition."""
+    m = _TRIP_RE.search(line)
+    if m:
+        return int(m.group(1))
+    trip = 1
+    for cl in comps.get(cond, ()):
+        for c in _CONST_RE.findall(cl):
+            trip = max(trip, int(c))
+    return trip
+
+
+def _comp_multipliers(comps: Dict[str, List[str]], entry: str) -> Dict[str, float]:
+    """Execution-count multiplier per computation (loop trip counts)."""
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    if entry in mult:
+        mult[entry] = 1.0
+    # fixpoint over the (shallow) call graph
+    for _ in range(8):
+        changed = False
+        for name, lines in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for line in lines:
+                w = _WHILE_RE.search(line)
+                if w:
+                    cond, body = w.group(1), w.group(2)
+                    trip = _trip_count(line, comps, cond)
+                    for tgt, factor in ((body, trip), (cond, trip)):
+                        new = m * factor
+                        if tgt in mult and mult[tgt] < new:
+                            mult[tgt] = new
+                            changed = True
+                    continue
+                c = _CALL_RE.search(line)
+                if c:
+                    for tgt in re.split(r",\s*", c.group(1)):
+                        tgt = tgt.lstrip("%")
+                        if tgt in mult and mult[tgt] < m:
+                            mult[tgt] = m
+                            changed = True
+        if not changed:
+            break
+    return mult
+
+
+def dissect(hlo: str, total_devices: int, top: int = 20):
+    """Rank collectives by loop-weighted bytes, with op_name provenance.
+
+    The per-op ``metadata={op_name=...}`` string names the jaxpr source
+    (e.g. 'transpose(jvp(...))/dot_general'), which localizes each
+    collective to model code — the §Perf hypothesis generator."""
+    comps = split_computations(hlo)
+    entry = ""
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            entry = line.split()[1].lstrip("%").split("(")[0]
+    mult = _comp_multipliers(comps, entry)
+    rows = []
+    meta_re = re.compile(r'op_name="([^"]*)"')
+    for name, lines in comps.items():
+        m = max(mult.get(name, 0.0), 1.0)
+        for line in lines:
+            c = _COLL_RE.search(line)
+            if not c:
+                continue
+            op = c.group(1)
+            eq = line.find("=")
+            out_type = line[eq + 1:c.start()] if eq >= 0 else ""
+            n = _group_size(line, total_devices)
+            b = _op_bytes(op, shape_bytes(out_type), n)
+            mm = meta_re.search(line)
+            rows.append({
+                "op": op, "bytes": b, "mult": m, "weighted": int(b * m),
+                "group": n, "comp": name,
+                "src": mm.group(1)[-120:] if mm else "",
+            })
+    rows.sort(key=lambda r: -r["weighted"])
+    return rows[:top]
+
+
+def collective_report(hlo: str, total_devices: int) -> CollectiveReport:
+    comps = split_computations(hlo)
+    entry = ""
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            entry = line.split()[1].lstrip("%").split("(")[0]
+    if not entry:
+        entry = next(iter(comps), "")
+    mult = _comp_multipliers(comps, entry)
+
+    rep = CollectiveReport()
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        for line in lines:
+            c = _COLL_RE.search(line)
+            if not c:
+                continue
+            op = c.group(1)
+            # the result type is everything between '=' and the op name
+            eq = line.find("=")
+            out_type = line[eq + 1:c.start()] if eq >= 0 else ""
+            n = _group_size(line, total_devices)
+            b = _op_bytes(op, shape_bytes(out_type), n)
+            rep.flat_bytes += b
+            rep.weighted_bytes += int(b * max(m, 1.0))
+            rep.counts[op] = rep.counts.get(op, 0) + 1
+            rep.weighted_counts[op] = rep.weighted_counts.get(op, 0.0) + \
+                max(m, 1.0)
+            rep.by_comp[name] = rep.by_comp.get(name, 0) + b
+    return rep

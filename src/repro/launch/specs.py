@@ -1,0 +1,212 @@
+"""Abstract input/state specs per (arch × shape) cell — no allocation.
+
+Everything here returns ``jax.ShapeDtypeStruct`` trees plus matching
+``NamedSharding`` trees, so ``jax.jit(...).lower(...)`` can compile the full
+production configuration without materializing a single parameter
+(1T-parameter models lower fine on the CPU container).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed import sharding as dist
+from ..models import cache_spec_axes, init_cache, init_model
+from ..models.config import ModelConfig, ShapeConfig, SHAPES_BY_NAME
+from ..optim import Optimizer
+
+PyTree = Any
+
+PATCH_TOKENS = 256        # chameleon stub: VQ patches fused at the front
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """Cell-skip policy (recorded, never silent)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("long-context policy: pure full-attention arch has no "
+                "sub-quadratic path at 524k (DESIGN.md §7)")
+    return None
+
+
+def probe_config(cfg: ModelConfig, layers: int) -> ModelConfig:
+    """Same arch with a reduced *layer count only* (roofline probes)."""
+    kw: Dict[str, Any] = {"layers": layers}
+    if cfg.encoder is not None:
+        kw["encoder"] = dataclasses.replace(cfg.encoder, layers=layers)
+    return dataclasses.replace(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Abstract model/optimizer state
+# ---------------------------------------------------------------------------
+
+def abstract_state(cfg: ModelConfig, optimizer: Optional[Optimizer] = None
+                   ) -> Tuple[PyTree, PyTree, Optional[PyTree]]:
+    """(params_sds, axes, opt_sds) via eval_shape — zero allocation."""
+    captured: Dict[str, Any] = {}
+
+    def f(key):
+        p, a = init_model(key, cfg)
+        captured["axes"] = a
+        return p
+
+    params_sds = jax.eval_shape(f, jax.random.PRNGKey(0))
+    axes = captured["axes"]
+    opt_sds = None
+    if optimizer is not None:
+        opt_sds = jax.eval_shape(optimizer.init, params_sds)
+    return params_sds, axes, opt_sds
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, params_sds: PyTree,
+                    axes: PyTree, opt_sds: Optional[PyTree] = None
+                    ) -> Tuple[PyTree, Optional[PyTree], Dict]:
+    rules = dist.rules_for(cfg, mesh)
+    with dist.use_mesh_rules(mesh, rules):
+        p_sh = dist.shardings_for(axes, params_sds, mesh, rules)
+    opt_sh = None
+    if opt_sds is not None:
+        # each optimizer-state leaf inherits its parameter's sharding,
+        # then gets the ZeRO-1 extension over the batch axes.
+        opt_sh = _opt_shardings(p_sh, opt_sds)
+        opt_sh = jax.tree.map(
+            lambda sh, sds: _zero1_one(sh, sds, mesh),
+            opt_sh, opt_sds,
+            is_leaf=lambda t: isinstance(t, NamedSharding))
+    return p_sh, opt_sh, rules
+
+
+def _opt_shardings(param_shardings: PyTree, opt_sds: PyTree) -> PyTree:
+    """Give each optimizer-state leaf its parameter's sharding when the
+    shapes match, else replicate (factored Adafactor vectors)."""
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(param_shardings,
+                                                     is_leaf=lambda t: isinstance(t, NamedSharding))
+    by_path = {tuple(str(k) for k in path): sh for path, sh in flat_p}
+
+    def locate(path):
+        """Match an opt-state path to its param path by dropping the
+        state-prefix keys (m/v/f) and trailing state keys (v/vr/vc)."""
+        keys = [str(k) for k in path]
+        keys = [k for k in keys if k not in ("['m']", "['v']", "['f']",
+                                             "['vr']", "['vc']")]
+        return tuple(keys)
+
+    flat_o, treedef = jax.tree_util.tree_flatten_with_path(opt_sds)
+    out = []
+    for path, sds in flat_o:
+        sh = by_path.get(locate(path))
+        if sh is not None and len(sh.spec) <= len(sds.shape):
+            # same-rank state (m/v): reuse; factored vectors keep a prefix
+            spec = tuple(sh.spec)[:len(sds.shape)]
+            mesh = sh.mesh
+            out.append(NamedSharding(mesh, P(*spec)))
+        elif sh is not None:
+            out.append(NamedSharding(sh.mesh, P()))
+        else:
+            raise KeyError(f"no param sharding for opt leaf {path}")
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _zero1_one(sh: NamedSharding, sds, mesh: Mesh) -> NamedSharding:
+    """ZeRO-1: extend one state leaf's sharding over the batch axes."""
+    batch = dist.batch_axes(mesh)
+    if not batch:
+        return sh
+    import numpy as np
+    denom = int(np.prod([mesh.shape[a] for a in batch]))
+    spec = list(sh.spec) + [None] * (len(sds.shape) - len(sh.spec))
+    used = set()
+    for e in spec:
+        for a in ((e,) if isinstance(e, str) else (e or ())):
+            used.add(a)
+    if any(a in used for a in batch):
+        return sh
+    best, best_size = None, 0
+    for i, (e, size) in enumerate(zip(spec, sds.shape)):
+        if e is None and size % denom == 0 and size > best_size:
+            best, best_size = i, size
+    if best is not None:
+        spec[best] = batch if len(batch) > 1 else batch[0]
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Input specs per shape kind
+# ---------------------------------------------------------------------------
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def batch_entry(mesh: Mesh, global_batch: int):
+    """Mesh axes for the batch dim, or None when not divisible (batch=1
+    long-context decode leaves the data axis idle — recorded honestly)."""
+    import numpy as np
+    axes = dist.batch_axes(mesh)
+    if not axes:
+        return None
+    prod = int(np.prod([mesh.shape[a] for a in axes]))
+    if global_batch % prod != 0:
+        # try the largest divisible suffix (e.g. just 'data')
+        for k in range(len(axes) - 1, 0, -1):
+            sub = axes[-k:]
+            if global_batch % int(np.prod([mesh.shape[a] for a in sub])) == 0:
+                return sub if len(sub) > 1 else sub[0]
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                      ) -> Tuple[Dict, Dict]:
+    GB, S = shape.global_batch, shape.seq_len
+    batch = dist.batch_axes(mesh)
+    bspec = P(batch if len(batch) > 1 else batch[0] if batch else None)
+    sds = {
+        "tokens": jax.ShapeDtypeStruct((GB, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((GB, S), jnp.int32),
+    }
+    sh = {
+        "tokens": NamedSharding(mesh, P(*bspec, None)),
+        "labels": NamedSharding(mesh, P(*bspec, None)),
+    }
+    if cfg.encoder is not None:
+        sds["enc_embeds"] = jax.ShapeDtypeStruct(
+            (GB, cfg.encoder.seq_len, cfg.d_model), _dtype(cfg))
+        sh["enc_embeds"] = NamedSharding(mesh, P(*bspec, None, None))
+    elif cfg.frontend == "stub":
+        sds["patch_embeds"] = jax.ShapeDtypeStruct(
+            (GB, PATCH_TOKENS, cfg.d_model), _dtype(cfg))
+        sh["patch_embeds"] = NamedSharding(mesh, P(*bspec, None, None))
+    return sds, sh
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, mesh: Mesh
+                ) -> Tuple[PyTree, PyTree]:
+    sds = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    rules = dist.rules_for(cfg, mesh)
+    axes = cache_spec_axes(cfg)
+    with dist.use_mesh_rules(mesh, rules):
+        sh = {k: NamedSharding(
+            mesh, dist.spec_for(axes[k], rules, tuple(sds[k].shape)))
+            for k in sds}
+    return sds, sh
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                         ) -> int:
+    """Keep ~one 4k-token row per device per microbatch."""
+    import numpy as np
+    batch = dist.batch_axes(mesh)
+    shards = int(np.prod([mesh.shape[a] for a in batch])) if batch else 1
+    rows_per_dev = max(1, shape.global_batch // shards)
+    rows_per_mb = max(1, 4096 // shape.seq_len)
+    return max(1, rows_per_dev // rows_per_mb)
+
+
+def grad_dtype_for(cfg: ModelConfig):
+    """bf16 accumulators for the 1T MoE (f32 would not fit; DESIGN.md §6)."""
+    return jnp.bfloat16 if cfg.name == "kimi-k2-1t-a32b" else jnp.float32

@@ -1,0 +1,166 @@
+"""Mixture-of-Experts layer (GShard-style grouped dispatch, EP-shardable).
+
+Routing: softmax top-k with capacity dropping.  Tokens are processed in
+*groups* so the dispatch/combine one-hot tensors stay small and the group
+axis shards over the data mesh axis while the expert axis shards over the
+model mesh axis (EP).  GSPMD then emits the all-to-all between the
+token-sharded and expert-sharded layouts — the paper's "collective schedule"
+falls out of the sharding annotations rather than hand-written NCCL.
+
+Shapes (per call):
+  x          (B, S, d)      -> tokens (G, gsz, d)
+  router     (d, E)
+  wi, wg     (E, d, f)      SwiGLU expert FFN
+  wo         (E, f, d)
+  dispatch   (G, gsz, E, C) combine weights; C = ceil(gsz*k*cf/E)
+
+The auxiliary load-balance loss (Switch-style) is returned so the training
+loop can add it to the objective.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+def _norm_init(key, shape, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) > 1 else 1
+    return jax.random.normal(key, shape, dtype) / max(1, fan_in) ** 0.5
+
+
+# production mesh device counts the a2a layout must divide into
+_A2A_PAD_TO = 512
+
+
+def a2a_padded_experts(cfg: ModelConfig) -> int:
+    """Stored expert count under the 'moe_a2a' flag.
+
+    The all-to-all schedule distributes experts over every device, so
+    storage pads E up to a multiple of the largest production mesh (512;
+    256 divides it).  Only worthwhile when E is already device-scale —
+    small-E archs (llama4: 16) keep unpadded storage and the a2a path pads
+    transiently at call time instead."""
+    E = cfg.moe.num_experts
+    if "moe_a2a" in cfg.perf_flags and E >= 256:
+        return -(-E // _A2A_PAD_TO) * _A2A_PAD_TO
+    return E
+
+
+def init_moe(key, cfg: ModelConfig) -> Tuple[Params, Axes]:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    E_store = a2a_padded_experts(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _norm_init(ks[0], (d, E)),
+        "wi": _norm_init(ks[1], (E_store, d, f)),
+        "wg": _norm_init(ks[2], (E_store, d, f)),
+        "wo": _norm_init(ks[3], (E_store, f, d)),
+    }
+    a = {
+        "router": ("embed", None),
+        "wi": ("expert", "embed", "ff"),
+        "wg": ("expert", "embed", "ff"),
+        "wo": ("expert", "ff", "embed"),
+    }
+    return p, a
+
+
+def capacity(group_size: int, num_experts: int, top_k: int,
+             capacity_factor: float) -> int:
+    """Per-expert per-group token capacity (static)."""
+    c = math.ceil(group_size * top_k * capacity_factor / num_experts)
+    return max(4, c)
+
+
+def moe_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
+              group_size: int = 1024) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,d), aux_load_balance_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    T = B * S
+    gsz = min(group_size, T)
+    # pad T to a multiple of gsz (padding tokens route but are masked out)
+    G = -(-T // gsz)
+    Tp = G * gsz
+    xt = x.reshape(T, d)
+    if Tp != T:
+        xt = jnp.pad(xt, ((0, Tp - T), (0, 0)))
+    xg = xt.reshape(G, gsz, d)
+    C = capacity(gsz, E, k, m.capacity_factor)
+
+    from ..distributed import sharding as dist
+    # anchor the token-group layout: without this GSPMD computed the whole
+    # routing section replicated and re-gathered it per einsum — 12TB/step
+    # of avoidable collectives on kimi-k2 (EXPERIMENTS.md §Perf, iter B1)
+    xg = dist.constrain(xg, ("moe_groups", None, None))
+
+    # ---- routing ------------------------------------------------------------
+    # The router matmul runs in compute dtype and only the softmax is f32:
+    # an f32 router input would give the (G,t,d)-sized router VJP an f32
+    # dtype, poisoning the whole dispatch backward to f32 (2x collective
+    # bytes on kimi; §Perf iter B3).
+    logits = jnp.einsum("gtd,de->gte", xg,
+                        p["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (G,gsz,E)
+    gates, idx = jax.lax.top_k(probs, k)                         # (G,gsz,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- capacity assignment (GShard) ---------------------------------------
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)           # (G,gsz,k,E)
+    # token-major priority: flatten (t, k) with t outermost
+    flat = onehot.reshape(G, gsz * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                        # (G,gsz*k,E)
+    pos = pos.reshape(G, gsz, k, E)
+    pos_k = jnp.sum(pos * onehot, axis=-1)                       # (G,gsz,k)
+    fits = (pos_k < C) & (jnp.sum(onehot, -1) > 0)
+    pos_oh = jax.nn.one_hot(pos_k.astype(jnp.int32), C,
+                            dtype=jnp.float32)                   # (G,gsz,k,C)
+    pos_oh = pos_oh * fits[..., None]
+    # dispatch/combine over (E, C): contract the small k axis
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot, pos_oh)     # (G,gsz,E,C)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, pos_oh, gates)
+    dispatch = dist.constrain(dispatch, ("moe_groups", None, None, None))
+    combine = dist.constrain(combine, ("moe_groups", None, None, None))
+
+    # ---- expert FFN (EP: the e axis shards per the "expert" rule) -----------
+    # The constrain() pair below anchors the token-sharded -> expert-sharded
+    # layout transition; GSPMD emits the MoE all-to-all exactly here.
+    wi, wg, wo = p["wi"], p["wg"], p["wo"]
+    if wi.shape[0] != E:                    # a2a-padded storage, dense path
+        wi, wg, wo = wi[:E], wg[:E], wo[:E]
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)
+    xin = dist.constrain(xin, (None, "expert", None, None))
+    h = jnp.einsum("gecd,edf->gecf", xin, wi.astype(x.dtype))
+    g = jnp.einsum("gecd,edf->gecf", xin, wg.astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    out = jnp.einsum("gecf,efd->gecd", h, wo.astype(x.dtype))
+    # (§Perf iter B2 tried sharding this tensor's d_model over "model" to
+    # turn the f-contraction's all-reduce into a reduce-scatter; GSPMD kept
+    # the all-reduce and added gathers — refuted, reverted.)
+    out = dist.constrain(out, (None, "expert", None, None))
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), out)
+    y = dist.constrain(y, ("moe_groups", None, None))
+    # named for the remat policy: saving this small (g,t,d) tensor lets the
+    # backward pass skip recomputing the out-projection and its all-reduce
+    # over the kxcf-inflated (g,e,c,d) tensor (§Perf iter B5)
+    y = jax.ad_checkpoint.checkpoint_name(y, "moe_out")
+
+    y = y.reshape(Tp, d)[:T].reshape(B, S, d)
+
+    # ---- Switch aux loss: E * sum_e f_e * p_e --------------------------------
+    frac_tokens = jnp.mean(onehot[:, :, 0, :], axis=(0, 1))     # top-1 fraction
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

@@ -1,0 +1,6 @@
+"""Optimizers, schedules, gradient clipping."""
+from .optimizers import (Optimizer, adafactor, adamw, clip_by_global_norm,
+                         constant, global_norm, make_optimizer, warmup_cosine)
+
+__all__ = ["Optimizer", "adafactor", "adamw", "clip_by_global_norm",
+           "constant", "global_norm", "make_optimizer", "warmup_cosine"]

@@ -1,0 +1,189 @@
+"""Sharded-friendly optimizers: AdamW and Adafactor, plus clipping/schedules.
+
+Pure-pytree implementations (no optax dependency — the container is offline).
+Every state leaf mirrors its parameter's shape (AdamW) or factors it
+(Adafactor), so the distributed layer can shard optimizer state with the
+same (or coarser, ZeRO-1) rules as the parameters.
+
+Interface::
+
+    opt = adamw(lr_schedule, weight_decay=0.1)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params, step)
+
+``step`` is a traced scalar; the learning rate schedule is evaluated inside
+jit so one compiled train_step serves the whole run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / max(1, warmup_steps))
+        frac = jnp.clip((step - warmup_steps) /
+                        max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Gradient clipping
+# ---------------------------------------------------------------------------
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# Optimizer container
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array],
+                     Tuple[PyTree, PyTree]]
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: Schedule, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        stepf = step.astype(jnp.float32) + 1.0
+        lr_t = lr(step)
+        c1 = 1.0 - b1 ** stepf
+        c2 = 1.0 - b2 ** stepf
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            return (p - lr_t * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments — the 1T-param MoE choice)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: Schedule, *, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Shazeer & Stern 2018, factored for params with ndim >= 2.
+
+    State per >=2D leaf: row/col second-moment vectors over the two largest
+    trailing dims — O(n+m) instead of O(n*m); the reason a 1T-parameter
+    model's optimizer fits on a 512-chip slice at all (DESIGN.md §6).
+    """
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"f": jax.tree.map(per_leaf, params)}
+
+    def update(grads, state, params, step):
+        stepf = step.astype(jnp.float32) + 1.0
+        lr_t = lr(step)
+        beta = 1.0 - stepf ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction of the second moment
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)
+                vhat = (vr[..., :, None] * vc[..., None, :]) / denom[..., None]
+                upd_ = g / jnp.sqrt(vhat + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd_ = g / jnp.sqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + 1e-12)
+            upd_ = upd_ / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            return (p - lr_t * upd_).astype(p.dtype), new_s
+
+        # grads' structure is a prefix of state["f"] (state subtrees hang
+        # below each param leaf), so tree.map passes each state dict whole.
+        out = jax.tree.map(upd, grads, state["f"], params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_state = jax.tree.map(lambda t: t[1], out,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"f": new_state}
+
+    return Optimizer("adafactor", init, update)
+
+
+def make_optimizer(name: str, lr: Schedule, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,9 @@
+"""Runtime: step builders, fault tolerance, serving engine."""
+from .steps import (build_eval_step, build_serve_steps, build_train_step,
+                    cross_entropy, greedy_sample, loss_fn)
+from .ft import StragglerMonitor, TrainController, elastic_mesh_shape
+from .serving import Request, ServeEngine
+
+__all__ = ["build_eval_step", "build_serve_steps", "build_train_step",
+           "cross_entropy", "greedy_sample", "loss_fn", "StragglerMonitor",
+           "TrainController", "elastic_mesh_shape", "Request", "ServeEngine"]

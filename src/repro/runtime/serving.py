@@ -1,0 +1,133 @@
+"""Batched serving engine: continuous-batching decode over a KV cache pool.
+
+A minimal-but-real engine in the vLLM mold, sized for the dry-run shapes:
+
+* requests arrive with a prompt; the engine packs up to ``max_batch`` live
+  sequences into one decode batch backed by a shared cache;
+* prefill runs per-request (right-padded into the batch slot), decode runs
+  for the whole batch every step;
+* finished sequences (EOS or ``max_new``) free their slot for the next
+  queued request (continuous batching).
+
+The compiled decode step is shape-stable: (B, 1) tokens + the cache pytree,
+so serving never recompiles after warmup.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import init_cache
+from ..models.config import ModelConfig
+from .steps import build_serve_steps, greedy_sample
+
+PyTree = Any
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                   # (S,) int32
+    max_new: int = 16
+    eos: Optional[int] = None
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: PyTree, *,
+                 max_batch: int = 8, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        prefill_step, decode_step = build_serve_steps(cfg)
+        # per-slot prefill: batch dim 1 keeps the compiled shape stable
+        self._prefill = jax.jit(prefill_step)
+        self._decode = jax.jit(decode_step, donate_argnums=(2,))
+        self.cache = init_cache(cfg, max_batch, max_len)
+        self.index = np.zeros(max_batch, np.int32)       # per-slot position
+        self.last_tok = np.zeros((max_batch, 1), np.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: collections.deque = collections.deque()
+        self._rid = 0
+
+    # -- client API -----------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int = 16,
+               eos: Optional[int] = None) -> int:
+        self._rid += 1
+        self.queue.append(Request(self._rid, np.asarray(prompt, np.int32),
+                                  max_new, eos))
+        return self._rid
+
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self.slots[slot] = req
+            # per-request prefill into a FRESH batch-1 cache, then scatter
+            # the slot's rows into the pool.  Zeroing matters: attention KV
+            # rows are position-masked, but recurrent SSM state from the
+            # slot's previous occupant would contaminate the new request.
+            sub = jax.tree.map(
+                lambda c: jnp.zeros_like(c[:, slot:slot + 1]), self.cache)
+            toks = jnp.asarray(req.prompt[None, :])
+            logits, sub = self._prefill(self.params, toks, sub)
+            self.cache = jax.tree.map(
+                lambda pool, s: pool.at[:, slot:slot + 1].set(s),
+                self.cache, sub)
+            nxt = np.asarray(greedy_sample(logits))      # (1,1)
+            self.index[slot] = req.prompt.shape[0]
+            self.last_tok[slot] = nxt[0]
+            req.out.append(int(nxt[0, 0]))
+
+    def _retire(self) -> List[Request]:
+        done = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if req.eos is not None and req.eos in req.out:
+                # stop at the first EOS; later speculative tokens (decode
+                # runs before retire) are truncated away
+                req.out = req.out[:req.out.index(req.eos) + 1]
+                req.done = True
+            elif len(req.out) >= req.max_new:
+                req.out = req.out[:req.max_new]
+                req.done = True
+            if req.done:
+                done.append(req)
+                self.slots[slot] = None
+        return done
+
+    def step(self) -> List[Request]:
+        """One engine tick: admit, decode the live pool, retire."""
+        self._admit()
+        live = [s for s in range(self.max_batch) if self.slots[s] is not None]
+        if live:
+            # one decode for the whole pool with per-row cache indices
+            # (continuous batching); dead slots write garbage at their own
+            # positions, which the next admit's prefill overwrites.
+            toks = jnp.asarray(self.last_tok)
+            logits, self.cache = self._decode(
+                self.params, toks, self.cache,
+                jnp.asarray(self.index, jnp.int32))
+            nxt = np.asarray(greedy_sample(logits))
+            for s in live:
+                self.last_tok[s] = nxt[s]
+                self.index[s] += 1
+                self.slots[s].out.append(int(nxt[s, 0]))
+        return self._retire()
+
+    def run_until_drained(self, max_ticks: int = 1000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_ticks):
+            finished.extend(self.step())
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return finished

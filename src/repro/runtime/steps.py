@@ -1,0 +1,152 @@
+"""train_step / serve_step builders (the functions the launcher jits).
+
+``build_train_step`` assembles: microbatched gradient accumulation
+(lax.scan, so per-device activation memory is one microbatch), f32 (or
+bf16, for the 1T MoE) accumulators sharded like the parameters
+(=> GSPMD reduce-scatters each microbatch's grads: ZeRO-2), global-norm
+clipping, the MoE auxiliary loss, z-loss, and the optimizer update.
+
+``build_serve_steps`` returns (prefill_step, decode_step) closures over the
+config; decode donates the cache so serving is allocation-free per token.
+
+Everything here is mesh-agnostic: shardings are applied by the launcher via
+in_shardings/out_shardings; the bodies only use ``constrain`` hints.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward, decode_step as model_decode, prefill as model_prefill
+from ..models.config import ModelConfig
+from ..optim import Optimizer, clip_by_global_norm
+
+PyTree = Any
+
+MOE_AUX_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-4
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Mean token NLL (+ z-loss term), f32 accumulation.
+
+    Returns (nll, z_loss).  The z-loss (log^2 Z) keeps the softmax
+    normalizer bounded on long runs — standard large-scale practice.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    z = jnp.mean(jnp.square(logz))
+    return nll, z
+
+
+def _batch_extras(cfg: ModelConfig, batch: Dict[str, jax.Array]) -> Dict:
+    kw = {}
+    if cfg.encoder is not None:
+        kw["enc_embeds"] = batch["enc_embeds"]
+    elif cfg.frontend == "stub" and "patch_embeds" in batch:
+        kw["patch_embeds"] = batch["patch_embeds"]
+    return kw
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            unroll: bool = False) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(params, cfg, batch["tokens"], unroll=unroll,
+                          **_batch_extras(cfg, batch))
+    nll, z = cross_entropy(logits, batch["labels"])
+    loss = nll + MOE_AUX_WEIGHT * aux + Z_LOSS_WEIGHT * z
+    return loss, {"nll": nll, "moe_aux": aux, "z": z}
+
+
+def build_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                     microbatches: int = 1,
+                     clip_norm: float = 1.0,
+                     grad_dtype=jnp.float32,
+                     unroll: bool = False,
+                     acc_shardings=None,
+                     ) -> Callable:
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics).
+
+    ``acc_shardings``: optional NamedSharding tree for the gradient
+    accumulators.  Constraining them to the ZeRO-1 (batch-axes-extended)
+    layout turns the per-microbatch gradient all-reduce into a
+    reduce-scatter — half the bytes on the wire (ZeRO-2)."""
+
+    def train_step(params: PyTree, opt_state: PyTree,
+                   batch: Dict[str, jax.Array], step: jax.Array):
+        B = batch["tokens"].shape[0]
+        assert B % microbatches == 0, (B, microbatches)
+        mb = B // microbatches
+
+        def reshape_mb(x):
+            return x.reshape((microbatches, mb) + x.shape[1:])
+
+        mbatches = jax.tree.map(reshape_mb, batch)
+        grad_of = jax.value_and_grad(
+            functools.partial(loss_fn, cfg=cfg, unroll=unroll), has_aux=True)
+
+        def micro(carry, mbatch):
+            acc, loss_sum, nll_sum, aux_sum = carry
+            (loss, metr), grads = grad_of(params, batch=mbatch)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(grad_dtype), acc, grads)
+            return (acc, loss_sum + loss, nll_sum + metr["nll"],
+                    aux_sum + metr["moe_aux"]), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, grad_dtype), params)
+        if acc_shardings is not None:
+            zeros = jax.tree.map(
+                jax.lax.with_sharding_constraint, zeros, acc_shardings)
+        init = (zeros, jnp.zeros((), jnp.float32),
+                jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+        (gacc, loss_sum, nll_sum, aux_sum), _ = jax.lax.scan(
+            micro, init, mbatches)
+
+        grads = jax.tree.map(lambda g: g / microbatches, gacc)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, step)
+        metrics = {
+            "loss": loss_sum / microbatches,
+            "nll": nll_sum / microbatches,
+            "moe_aux": aux_sum / microbatches,
+            "grad_norm": gnorm,
+        }
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_eval_step(cfg: ModelConfig) -> Callable:
+    def eval_step(params, batch):
+        loss, metr = loss_fn(params, cfg, batch)
+        return {"loss": loss, **metr}
+    return eval_step
+
+
+def build_serve_steps(cfg: ModelConfig, *, unroll: bool = False
+                      ) -> Tuple[Callable, Callable]:
+    """(prefill_step, decode_step) for the serving engine.
+
+    prefill_step(params, tokens, cache[, enc_embeds/patch_embeds])
+        -> (last_logits, cache)
+    decode_step(params, tokens(B,1), cache, index) -> (logits, cache)
+    """
+
+    def prefill_step(params, tokens, cache, **kw):
+        return model_prefill(params, cfg, tokens, cache, unroll=unroll, **kw)
+
+    def decode_one(params, tokens, cache, index):
+        return model_decode(params, cfg, tokens, cache, index, unroll=unroll)
+
+    return prefill_step, decode_one
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]

@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+real single CPU device; only the dry-run subprocesses force 512 devices."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,210 @@
+"""Per-arch smoke tests (reduced same-family configs) + layer equivalences."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (decode_step, forward, init_cache, init_model,
+                          prefill)
+from repro.models import layers as L
+from repro.models.config import SHAPES_BY_NAME
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _extras(cfg, B, seed=0):
+    kw = {}
+    if cfg.encoder is not None:
+        kw["enc_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed), (B, cfg.encoder.seq_len, cfg.d_model))
+    elif cfg.frontend == "stub":
+        kw["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed), (B, 8, cfg.d_model))
+    return kw
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    params, axes = init_model(KEY, cfg)
+    B, S = 2, 32
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    logits, aux = jax.jit(
+        lambda p, t: forward(p, cfg, t, **_extras(cfg, B)))(params, tokens)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_one_train_step(arch):
+    from repro.optim import adamw, constant
+    from repro.runtime import build_train_step
+    cfg = get_smoke_config(arch)
+    params, _ = init_model(KEY, cfg)
+    opt = adamw(constant(1e-3))
+    state = opt.init(params)
+    step = jax.jit(build_train_step(cfg, opt, microbatches=2))
+    B, S = 4, 16
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab),
+        **_extras(cfg, B),
+    }
+    params2, state2, metrics = step(params, state, batch,
+                                    jnp.zeros((), jnp.int32))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # parameters actually moved
+    delta = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                           b.astype(jnp.float32)))),
+        params, params2))
+    assert max(delta) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    """Greedy continuation via (prefill -> decode_step) must equal running
+    the full forward over the extended sequence — KV/SSM cache correctness.
+
+    For MoE archs the capacity factor is raised so routing is dropless:
+    capacity dropping makes train-forward and decode legitimately differ
+    (dropping depends on which other tokens share the batch)."""
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    params, _ = init_model(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 24
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    kw = _extras(cfg, B)
+
+    cache = init_cache(cfg, B, max_len=S + 4)
+    last, cache = prefill(params, cfg, tokens, cache, **kw)
+    nxt = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+
+    # reference: full forward over S+1 tokens
+    ext = jnp.concatenate([tokens, nxt], axis=1)
+    ref_logits, _ = forward(params, cfg, ext, **kw)
+    dec_logits, cache = decode_step(params, cfg, nxt, cache,
+                                    jnp.asarray(S, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(ref_logits[:, -1], np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_param_count_analytic_close():
+    """ModelConfig.param_count() within 10% of the real initialized count."""
+    from repro.models import param_count
+    for arch in ("yi_6b", "llama3_8b", "mamba2_130m"):
+        cfg = get_smoke_config(arch)
+        params, _ = init_model(KEY, cfg)
+        actual = param_count(params)
+        claimed = cfg.param_count()
+        assert abs(actual - claimed) / actual < 0.10, (arch, actual, claimed)
+
+
+def test_full_config_param_counts_match_papers():
+    """Full configs must land near their published sizes."""
+    expect = {
+        "llama3_8b": (8.0e9, 0.15),
+        "yi_6b": (6.1e9, 0.15),
+        "qwen1p5_4b": (4.0e9, 0.25),
+        "kimi_k2_1t_a32b": (1.0e12, 0.2),
+        "chameleon_34b": (34e9, 0.15),
+        "mamba2_130m": (130e6, 0.3),
+    }
+    for arch, (target, tol) in expect.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < tol, (arch, n, target)
+
+
+def test_chunked_sdpa_equals_dense():
+    B, S, nh, nk, hd = 2, 256, 4, 2, 32
+    q = jax.random.normal(KEY, (B, S, nh, hd))
+    k = jax.random.normal(jax.random.PRNGKey(3), (B, S, nk, hd))
+    v = jax.random.normal(jax.random.PRNGKey(4), (B, S, nk, hd))
+    pos = jnp.arange(S)
+    for window in (None, 64):
+        dense = L._sdpa(q, k, v, causal=True, window=window,
+                        q_positions=pos, k_positions=pos)
+        chunked = L._sdpa_chunked(q, k, v, causal=True, window=window,
+                                  q_positions=pos, k_positions=pos,
+                                  q_block=96)   # non-divisible on purpose
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_ring_cache_equals_full_cache_decode():
+    """Windowed ring cache must produce the same logits as a full cache."""
+    cfg = get_smoke_config("hymba_1p5b")          # window=32
+    params, _ = init_model(jax.random.PRNGKey(5), cfg)
+    B, S, extra = 1, 40, 6                        # S > window
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (B, S), 0, cfg.vocab)
+
+    # ring cache (max_len > window -> ring of size window)
+    ring = init_cache(cfg, B, max_len=S + extra)
+    assert ring["k"].shape[2] == cfg.window       # (L,B,W,nk,hd)
+    last_r, ring = prefill(params, cfg, tokens, ring)
+
+    # reference: full forward step-by-step
+    cur = tokens
+    for i in range(extra):
+        nxt = jnp.argmax(last_r, -1).astype(jnp.int32)[:, None]
+        full_logits, _ = forward(params, cfg,
+                                 jnp.concatenate([cur, nxt], 1))
+        dec_logits, ring = decode_step(params, cfg, nxt, ring,
+                                       jnp.asarray(S + i, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(dec_logits, np.float32),
+            np.asarray(full_logits[:, -1], np.float32),
+            rtol=3e-2, atol=3e-2)
+        cur = jnp.concatenate([cur, nxt], 1)
+        last_r = dec_logits
+
+
+def test_vector_cache_index_matches_scalar():
+    """Continuous-batching (vector index) decode == scalar-index decode."""
+    cfg = get_smoke_config("yi_6b")
+    params, _ = init_model(jax.random.PRNGKey(7), cfg)
+    B, S = 3, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(8), (B, S), 0, cfg.vocab)
+    c1 = init_cache(cfg, B, 32)
+    c2 = init_cache(cfg, B, 32)
+    last, c1 = prefill(params, cfg, tokens, c1)
+    _, c2 = prefill(params, cfg, tokens, c2)
+    nxt = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+    lg_s, _ = decode_step(params, cfg, nxt, c1, jnp.asarray(S, jnp.int32))
+    lg_v, _ = decode_step(params, cfg, nxt, c2,
+                          jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_v, np.float32),
+                               np.asarray(lg_s, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_shapes_registry():
+    assert set(SHAPES_BY_NAME) == {"train_4k", "prefill_32k", "decode_32k",
+                                   "long_500k"}
+    assert SHAPES_BY_NAME["long_500k"].seq_len == 524_288
+
+
+@pytest.mark.parametrize("flags", [("attn_q_heads",), ("rope_compute",),
+                                   ("probs_bf16",),
+                                   ("attn_q_heads", "rope_compute",
+                                    "probs_bf16")])
+def test_perf_flags_preserve_numerics(flags):
+    """Beyond-paper perf variants must stay within bf16 noise of baseline."""
+    cfg = get_smoke_config("llama3_8b")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0, cfg.vocab)
+    base, _ = forward(params, cfg, tokens)
+    cfg2 = dataclasses.replace(cfg, perf_flags=flags)
+    out, _ = forward(params, cfg2, tokens)
+    b = np.asarray(base, np.float32)
+    o = np.asarray(out, np.float32)
+    rel = np.abs(o - b).max() / (np.abs(b).max() + 1e-9)
+    assert rel < 0.05, (flags, rel)

@@ -1,0 +1,108 @@
+"""Property tests for the exact polynomial arithmetic (core substrate)."""
+from fractions import Fraction
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.polynomial import Poly, V
+
+VARS = ["x", "y", "z"]
+
+
+@st.composite
+def polys(draw, max_terms=4, max_exp=3):
+    n = draw(st.integers(0, max_terms))
+    terms = {}
+    for _ in range(n):
+        nvars = draw(st.integers(0, 2))
+        mono = []
+        used = set()
+        for _ in range(nvars):
+            v = draw(st.sampled_from(VARS))
+            if v in used:
+                continue
+            used.add(v)
+            mono.append((v, draw(st.integers(1, max_exp))))
+        coeff = Fraction(draw(st.integers(-9, 9)), draw(st.integers(1, 5)))
+        mono = tuple(sorted(mono))
+        terms[mono] = terms.get(mono, Fraction(0)) + coeff
+    return Poly(terms)
+
+
+assignments = st.fixed_dictionaries(
+    {v: st.integers(-5, 5) for v in VARS})
+
+
+@settings(max_examples=150, deadline=None)
+@given(polys(), polys(), assignments)
+def test_add_homomorphism(p, q, asg):
+    assert (p + q).eval(asg) == p.eval(asg) + q.eval(asg)
+
+
+@settings(max_examples=150, deadline=None)
+@given(polys(), polys(), assignments)
+def test_mul_homomorphism(p, q, asg):
+    assert (p * q).eval(asg) == p.eval(asg) * q.eval(asg)
+
+
+@settings(max_examples=100, deadline=None)
+@given(polys(), polys(), polys())
+def test_ring_axioms(p, q, r):
+    assert p + q == q + p
+    assert p * q == q * p
+    assert (p + q) + r == p + (q + r)
+    assert p * (q + r) == p * q + p * r
+    assert p - p == Poly.const(0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(polys(), st.integers(0, 4), assignments)
+def test_pow(p, n, asg):
+    assert (p ** n).eval(asg) == p.eval(asg) ** n
+
+
+@settings(max_examples=100, deadline=None)
+@given(polys(), assignments)
+def test_full_substitution_equals_eval(p, asg):
+    sub = p.subs(asg)
+    assert sub.is_constant()
+    assert sub.constant_value() == p.eval(asg)
+
+
+@settings(max_examples=100, deadline=None)
+@given(polys(), st.integers(-5, 5), assignments)
+def test_partial_substitution(p, xval, asg):
+    partial = p.subs({"x": xval})
+    assert "x" not in partial.variables()
+    full = dict(asg)
+    full["x"] = xval
+    assert partial.eval(full) == p.eval(full)
+
+
+@settings(max_examples=80, deadline=None)
+@given(polys(), polys())
+def test_substitute_poly_for_var(p, q):
+    """p(x <- q) evaluated == p evaluated at q's value (composition)."""
+    asg = {"x": 2, "y": 3, "z": -1}
+    composed = p.subs({"x": q})
+    assert composed.eval(asg) == p.eval({**asg, "x": q.eval(asg)})
+
+
+def test_degree_and_vars():
+    p = V("x") * V("x") * V("y") + 3
+    assert p.degree() == 3
+    assert p.degree("x") == 2
+    assert p.degree("y") == 1
+    assert p.variables() == frozenset({"x", "y"})
+
+
+def test_hash_eq_semantics():
+    assert hash(V("x") + 1 - 1) == hash(V("x"))
+    assert V("x") * 0 == Poly.const(0)
+    assert not (V("x") * 0)
+
+
+def test_repr_roundtrip_smoke():
+    p = 2 * V("x") ** 2 - V("y") / 3 + 1
+    s = repr(p)
+    assert "x^2" in s and "y" in s

@@ -1,0 +1,98 @@
+"""Hypothesis property tests on system-level invariants (fast, pure CPU)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.hlo_analysis import DTYPE_BYTES, shape_bytes
+from repro.models.moe import capacity
+from repro.runtime import elastic_mesh_shape
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 4096), st.sampled_from([4, 8, 16, 32]))
+def test_elastic_mesh_always_valid(n, prefer):
+    data, model = elastic_mesh_shape(n, prefer_model=prefer)
+    assert data * model == n                  # every device used
+    assert model >= 1 and data >= 1
+    assert prefer % model == 0                # model degree only shrinks 2x
+    # keeps the preferred degree whenever divisible
+    if n % prefer == 0:
+        assert model == prefer
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 500), st.integers(2, 64), st.integers(1, 8),
+       st.integers(0, 3), st.integers(0, 100))
+def test_pipeline_stateless_and_sharded(vocab, seq, batch, seed, step):
+    ds = SyntheticLM(DataConfig(vocab=vocab, seq_len=seq, global_batch=batch,
+                                seed=seed))
+    b1 = ds.batch_at(step)
+    b2 = ds.batch_at(step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < vocab
+    # shifted labels invariant
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # host shards partition the global batch exactly
+    if batch >= 2:
+        h = batch // 2
+        top = ds.batch_at(step, host_slice=slice(0, h))
+        bot = ds.batch_at(step, host_slice=slice(h, batch))
+        np.testing.assert_array_equal(
+            np.concatenate([top["tokens"], bot["tokens"]]), b1["tokens"])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 50))
+def test_pipeline_steps_differ(step):
+    ds = SyntheticLM(DataConfig(vocab=1000, seq_len=64, global_batch=2))
+    a = ds.batch_at(step)["tokens"]
+    b = ds.batch_at(step + 1)["tokens"]
+    assert not np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# MoE capacity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 512), st.integers(1, 16),
+       st.floats(0.25, 8.0))
+def test_capacity_bounds(gsz, E, k, cf):
+    c = capacity(gsz, E, k, cf)
+    assert c >= 4
+    # with capacity_factor >= 1 and k <= E, total slots cover assignments
+    if cf >= 1.0 and k <= E:
+        assert E * c >= gsz * k
+
+
+# ---------------------------------------------------------------------------
+# HLO shape parser
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.sampled_from(sorted(DTYPE_BYTES)),
+       st.lists(st.integers(1, 64), min_size=0, max_size=4))
+def test_shape_bytes_roundtrip(dt, dims):
+    s = f"{dt}[{','.join(map(str, dims))}]{{{0}}}"
+    want = DTYPE_BYTES[dt] * int(np.prod(dims)) if dims else DTYPE_BYTES[dt]
+    assert shape_bytes(s) == want
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(sorted(DTYPE_BYTES)),
+                          st.lists(st.integers(1, 32), min_size=1,
+                                   max_size=3)),
+                min_size=1, max_size=4))
+def test_shape_bytes_tuples_sum(parts):
+    s = "(" + ", ".join(
+        f"{dt}[{','.join(map(str, dims))}]" for dt, dims in parts) + ")"
+    want = sum(DTYPE_BYTES[dt] * int(np.prod(dims)) for dt, dims in parts)
+    assert shape_bytes(s) == want

@@ -1,0 +1,68 @@
+"""Serving engine: continuous batching must equal per-request greedy decode."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import decode_step, forward, init_cache, init_model, prefill
+from repro.runtime import ServeEngine
+
+
+def _reference_greedy(cfg, params, prompt, max_new):
+    """Straight full-forward greedy decode (no cache) — slow oracle."""
+    cur = jnp.asarray(prompt, jnp.int32)[None]
+    out = []
+    for _ in range(max_new):
+        logits, _ = forward(params, cfg, cur)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        cur = jnp.concatenate([cur, jnp.asarray([[nxt]], jnp.int32)], axis=1)
+    return out
+
+
+@pytest.mark.parametrize("arch", ["yi_6b", "mamba2_130m", "hymba_1p5b"])
+def test_engine_matches_reference(arch):
+    cfg = get_smoke_config(arch)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_batch=3, max_len=64)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(4, 12)))
+               for _ in range(5)]
+    rids = [eng.submit(p, max_new=6) for p in prompts]
+    done = {r.rid: r for r in eng.run_until_drained()}
+    assert set(done) == set(rids)
+    for rid, prompt in zip(rids, prompts):
+        want = _reference_greedy(cfg, params, prompt, 6)
+        got = done[rid].out[:6]
+        # bf16 accumulation differences can flip near-tie argmax very rarely;
+        # require exact match on the first tokens and >= 4/6 overall
+        assert got[0] == want[0], (arch, got, want)
+        agree = sum(g == w for g, w in zip(got, want))
+        assert agree >= 4, (arch, got, want)
+
+
+def test_continuous_batching_slot_reuse():
+    cfg = get_smoke_config("yi_6b")
+    params, _ = init_model(jax.random.PRNGKey(1), cfg)
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=48)
+    rng = np.random.default_rng(1)
+    n = 7                                  # > max_batch: forces slot reuse
+    for i in range(n):
+        eng.submit(rng.integers(0, cfg.vocab, 5 + i), max_new=4)
+    done = eng.run_until_drained()
+    assert len(done) == n
+    assert all(len(r.out) >= 4 for r in done)
+
+
+def test_eos_stops_early():
+    cfg = get_smoke_config("yi_6b")
+    params, _ = init_model(jax.random.PRNGKey(2), cfg)
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=48)
+    # discover the greedy first token, then use it as EOS
+    probe = eng.submit(np.arange(6), max_new=1)
+    first = eng.run_until_drained()[0].out[0]
+    eng2 = ServeEngine(cfg, params, max_batch=2, max_len=48)
+    rid = eng2.submit(np.arange(6), max_new=16, eos=first)
+    done = eng2.run_until_drained()
+    assert len(done[0].out) == 1          # stopped at eos immediately
