@@ -94,6 +94,34 @@ def bench_fig2_matadd(quick=False):
              f"cases={len(leaves)} best={cand.describe()}")]
 
 
+def bench_dispatch_cache(quick=False):
+    """Amortized dispatch: cold tree-search vs warm DispatchCache lookup.
+
+    Derived column reports the speedup — the number that justifies shipping
+    precompiled artifacts for serving-style traffic where the same
+    (family, machine, shape) triple recurs millions of times."""
+    from repro.artifacts.dispatch import DispatchCache
+    from repro.core.select import STATS
+    cache = DispatchCache()
+    data = {"M": 1024, "N": 1024, "K": 1024}
+    STATS.reset()
+    t0 = time.perf_counter()
+    cold = cache.best_variant(MATMUL, TPU_V5E, data)
+    cold_us = (time.perf_counter() - t0) * 1e6
+    iters = 200 if quick else 2000
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        warm = cache.best_variant(MATMUL, TPU_V5E, data)
+    warm_us = (time.perf_counter() - t0) * 1e6 / iters
+    assert warm == cold and STATS.enumerate_calls == 1
+    return [
+        ("dispatch_cold_matmul", cold_us, f"best={cold.describe()}"),
+        ("dispatch_warm_matmul", warm_us,
+         f"speedup={cold_us / max(warm_us, 1e-9):.0f}x "
+         f"enumerate_calls={STATS.enumerate_calls}"),
+    ]
+
+
 def bench_tree_build():
     """Offline cost of comprehensive optimization itself (paper §6 claims
     the computer-algebra part is not a bottleneck)."""
@@ -140,7 +168,8 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     for fn in (bench_table1_matmul, bench_table2_jacobi,
-               bench_table3_transpose, bench_fig2_matadd):
+               bench_table3_transpose, bench_fig2_matadd,
+               bench_dispatch_cache):
         for name, us, derived in fn(args.quick):
             print(f"{name},{us:.1f},{derived}", flush=True)
     for name, us, derived in bench_tree_build():

@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Compile comprehensive-optimization artifacts offline.
+
+Builds the case-discussion tree for each kernel family, serializes it, and
+emits per-machine dispatch tables with pre-ranked candidates per data-shape
+bucket.  Ship the output directory with the model weights; at load time the
+runtime resolves every kernel-variant decision with a table lookup instead of
+a tree search (set ``REPRO_ARTIFACT_DIR`` or run from the directory holding
+``artifacts/``).
+
+    PYTHONPATH=src python scripts/compile_artifacts.py                 # all
+    PYTHONPATH=src python scripts/compile_artifacts.py --family matmul \
+        --machine tpu_v5e --out artifacts --verify
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.artifacts import ArtifactStore, compile_all          # noqa: E402
+from repro.core.comprehensive import comprehensive_optimization  # noqa: E402
+from repro.core.params import MACHINES                           # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--family", action="append", default=None,
+                    help="kernel family to compile (repeatable; default all)")
+    ap.add_argument("--machine", action="append", default=None,
+                    choices=sorted(MACHINES),
+                    help="target machine (repeatable; default all)")
+    ap.add_argument("--out", default=None,
+                    help="artifact root (default: $REPRO_ARTIFACT_DIR "
+                         "or ./artifacts)")
+    ap.add_argument("--top-k", type=int, default=8,
+                    help="pre-ranked candidates kept per data-shape bucket")
+    ap.add_argument("--quick", action="store_true",
+                    help="one data-shape bucket per family (CI smoke)")
+    ap.add_argument("--verify", action="store_true",
+                    help="reload each tree and check leaf-for-leaf equality "
+                         "against a fresh in-process build")
+    args = ap.parse_args(argv)
+
+    store = ArtifactStore(args.out)
+    machines = ([MACHINES[m] for m in args.machine] if args.machine else None)
+    try:
+        reports = compile_all(store, families=args.family, machines=machines,
+                              top_k=args.top_k, quick=args.quick)
+    except KeyError as e:
+        ap.error(str(e.args[0] if e.args else e))
+
+    failures = 0
+    for rep in reports:
+        line = (f"[OK] {rep['family']}: {rep['leaves']} leaves "
+                f"digest={rep['tree_digest']} ({rep['seconds']}s)")
+        for mname, d in rep["dispatch"].items():
+            line += (f"\n     {mname}: {d['kept_leaves']} leaves, "
+                     f"{d['buckets']} buckets -> {d['path']}")
+        print(line, flush=True)
+        if args.verify:
+            from repro.artifacts.compile import registered_families
+            family = registered_families()[rep["family"]]
+            reloaded = store.load_tree(rep["family"])
+            fresh = comprehensive_optimization(family)
+            if reloaded is None or reloaded != fresh:
+                print(f"[VERIFY FAIL] {rep['family']}: reloaded tree != "
+                      f"fresh build", file=sys.stderr)
+                failures += 1
+            else:
+                print(f"     verify: reloaded == fresh "
+                      f"({len(reloaded)} leaves)")
+    print(f"compiled {len(reports)} families into {store.root}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

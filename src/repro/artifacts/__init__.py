@@ -1,0 +1,23 @@
+"""Persistent case-discussion artifacts (the paper's offline/online split).
+
+- :mod:`repro.artifacts.serde`    — versioned deterministic serialization of
+  ``Poly`` / ``Constraint`` / ``ConstraintSystem`` / ``KernelPlan`` / ``Leaf``
+- :mod:`repro.artifacts.store`    — filesystem layout + forgiving loads
+- :mod:`repro.artifacts.compile`  — offline compiler (trees + per-machine
+  dispatch tables), driven by ``scripts/compile_artifacts.py``
+- :mod:`repro.artifacts.dispatch` — runtime ``DispatchCache``: memory LRU ->
+  disk artifact -> cold rebuild; makes ``best_variant`` an O(1) lookup
+"""
+from .serde import FORMAT_VERSION, ArtifactFormatError
+from .store import ArtifactStore
+from .dispatch import (DispatchCache, DispatchStats, bucket_key,
+                       get_default_cache, set_default_cache)
+from .compile import (DEFAULT_DATA_GRIDS, build_dispatch_table, compile_all,
+                      compile_family)
+
+__all__ = [
+    "FORMAT_VERSION", "ArtifactFormatError", "ArtifactStore",
+    "DispatchCache", "DispatchStats", "bucket_key", "get_default_cache",
+    "set_default_cache", "DEFAULT_DATA_GRIDS", "build_dispatch_table",
+    "compile_all", "compile_family",
+]

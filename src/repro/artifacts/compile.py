@@ -1,0 +1,138 @@
+"""Offline artifact compiler — the machine-free step of the paper, persisted.
+
+``compile_family`` runs comprehensive optimization once, saves the tree, and
+for each target machine emits a *dispatch table*: the machine-consistent
+leaves plus, per representative data-shape bucket, the top-k candidates
+pre-ranked by the offline performance model.  ``compile_all`` sweeps every
+registered kernel family.  This is what ``scripts/compile_artifacts.py``
+drives; CI runs it as a smoke step so a schema regression fails the build,
+not a deploy.
+
+Kernel families are imported lazily (they pull in jax/pallas); the serde and
+store layers stay importable on a bare interpreter.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence
+
+from ..core.comprehensive import comprehensive_tree
+from ..core.params import MACHINES, MachineDescription
+from ..core.plan import FamilySpec
+from ..core.select import rank_candidates, specialize
+from . import serde
+from .dispatch import bucket_key
+from .store import ArtifactStore
+
+# Representative data shapes per family: the pow-2 grid serving traffic
+# actually buckets into.  Off-grid shapes still resolve (dispatch re-validates
+# against exact data); on-grid shapes hit the precompiled ranking directly.
+_SQUARES = (512, 1024, 2048, 4096)
+DEFAULT_DATA_GRIDS: Dict[str, List[Dict[str, int]]] = {
+    "matmul": ([{"M": n, "N": n, "K": n} for n in _SQUARES]
+               + [{"M": 256, "N": 4096, "K": 1024},
+                  {"M": 4096, "N": 256, "K": 1024}]),
+    "matadd": [{"M": n, "N": n} for n in _SQUARES],
+    "transpose": [{"M": n, "N": n} for n in _SQUARES],
+    "jacobi1d": [{"N": n} for n in (1 << 12, 1 << 15, 1 << 18, 1 << 21)],
+    "flash_attention": [{"SQ": sq, "HD": hd}
+                        for sq in (1024, 4096, 8192, 32768)
+                        for hd in (64, 128)],
+    "ssd_scan": [{"SQ": sq, "HD": 64, "STATE": 128}
+                 for sq in (1024, 4096, 16384)],
+}
+
+
+def registered_families() -> Dict[str, FamilySpec]:
+    from ..kernels.ops import FAMILIES        # lazy: imports jax/pallas
+    return dict(FAMILIES)
+
+
+def build_dispatch_table(family: FamilySpec, machine: MachineDescription,
+                         shapes: Sequence[Mapping[str, int]],
+                         top_k: int = 8) -> Dict[str, Any]:
+    """Specialize the family tree for one machine; pre-rank per bucket."""
+    leaves = comprehensive_tree(family)
+    kept = specialize(leaves, machine, {})    # machine-consistent leaves
+    kept_indices = {i for i, _, _ in kept}
+
+    buckets: Dict[str, List[Dict[str, Any]]] = {}
+    for data in shapes:
+        key = bucket_key(data)
+        if key in buckets:
+            continue
+        try:
+            ranked = rank_candidates(family, machine, data, leaves=leaves)
+        except ValueError:
+            buckets[key] = []                 # nothing feasible at this shape
+            continue
+        buckets[key] = [
+            {"leaf_index": c.leaf_index,
+             "assignment": dict(c.assignment),
+             "score": float(c.score)}
+            for c in ranked[:top_k] if c.leaf_index in kept_indices
+        ]
+    # leaves keyed by their index in the *full* tree, so a disk-served
+    # Candidate carries the same leaf_index the cold path would produce
+    return {
+        "format": serde.FORMAT_VERSION,
+        "kind": "dispatch",
+        "family": family.name,
+        "machine": machine.name,
+        "machine_bindings": machine.bindings(),
+        "leaves": {str(i): serde.leaf_to_obj(leaves[i])
+                   for i in sorted(kept_indices)},
+        "buckets": buckets,
+        "top_k": top_k,
+    }
+
+
+def compile_family(family: FamilySpec, store: ArtifactStore,
+                   machines: Optional[Iterable[MachineDescription]] = None,
+                   shapes: Optional[Sequence[Mapping[str, int]]] = None,
+                   top_k: int = 8, quick: bool = False) -> Dict[str, Any]:
+    """Tree + per-machine dispatch tables for one family.  Returns a report.
+
+    ``quick`` compiles a single data-shape bucket (CI smoke: exercises the
+    full pipeline without sweeping the whole grid)."""
+    t0 = time.perf_counter()
+    leaves = comprehensive_tree(family)
+    tree_path = store.save_tree(family.name, leaves)
+    report: Dict[str, Any] = {
+        "family": family.name,
+        "leaves": len(leaves),
+        "tree_path": str(tree_path),
+        "tree_digest": serde.digest(serde.tree_to_obj(family.name, leaves)),
+        "dispatch": {},
+    }
+    shapes = shapes if shapes is not None else \
+        DEFAULT_DATA_GRIDS.get(family.name, [])
+    if quick:
+        shapes = shapes[:1]
+    for machine in (machines if machines is not None else MACHINES.values()):
+        table = build_dispatch_table(family, machine, shapes, top_k=top_k)
+        path = store.save_dispatch(table)
+        report["dispatch"][machine.name] = {
+            "path": str(path),
+            "kept_leaves": len(table["leaves"]),
+            "buckets": len(table["buckets"]),
+        }
+    report["seconds"] = round(time.perf_counter() - t0, 3)
+    return report
+
+
+def compile_all(store: ArtifactStore,
+                families: Optional[Iterable[str]] = None,
+                machines: Optional[Iterable[MachineDescription]] = None,
+                top_k: int = 8, quick: bool = False) -> List[Dict[str, Any]]:
+    registry = registered_families()
+    names = list(families) if families else sorted(registry)
+    reports = []
+    for name in names:
+        if name not in registry:
+            raise KeyError(
+                f"unknown kernel family {name!r}; have {sorted(registry)}")
+        reports.append(
+            compile_family(registry[name], store, machines=machines,
+                           top_k=top_k, quick=quick))
+    return reports

@@ -1,0 +1,210 @@
+"""O(1) runtime dispatch over precompiled case discussions.
+
+``DispatchCache.best_variant`` resolves a (family, machine, data) triple
+through three tiers:
+
+  1. **memory LRU** — exact-key memo of resolved :class:`Candidate`s; a
+     recurring triple (the serving steady state) costs one dict lookup;
+  2. **disk artifact** — a per-machine dispatch table compiled offline
+     (:mod:`repro.artifacts.compile`): leaves pre-specialized against the
+     machine bindings and candidates pre-ranked per data-shape *bucket*
+     (dims rounded up to powers of two).  On a bucket hit the ranked list is
+     re-validated against the *exact* data — a constant number of constraint
+     substitutions, no enumeration — so an off-grid shape still gets a sound
+     answer from the precompiled ranking;
+  3. **cold rebuild** — full ``rank_candidates`` over the tree (itself
+     loaded from the tree artifact when present, rebuilt in-process when
+     not).
+
+Soundness note: tier 2 never *invents* feasibility — every candidate it
+returns passes the same leaf-constraint check the cold path applies; if the
+whole precompiled shortlist fails for the exact data, we fall through to
+tier 3.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from ..core.constraints import Verdict
+from ..core.params import MachineDescription
+from ..core.plan import FamilySpec, Leaf
+from ..core.select import Candidate, rank_candidates
+from . import serde
+from .store import ArtifactStore
+
+DispatchKey = Tuple[str, str, Tuple[Tuple[str, int], ...]]
+
+
+def bucket_key(data: Mapping[str, int]) -> str:
+    """Canonical data-shape bucket: each dim rounded up to a power of two."""
+    parts = []
+    for k in sorted(data):
+        v = max(1, int(data[k]))
+        parts.append(f"{k}{1 << (v - 1).bit_length()}")
+    return "|".join(parts)
+
+
+@dataclass
+class DispatchStats:
+    memory_hits: int = 0
+    disk_hits: int = 0
+    cold_builds: int = 0
+
+    def reset(self) -> None:
+        self.memory_hits = self.disk_hits = self.cold_builds = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"memory_hits": self.memory_hits, "disk_hits": self.disk_hits,
+                "cold_builds": self.cold_builds}
+
+
+class DispatchCache:
+    """Memory LRU -> disk artifact -> cold rebuild, per paper's load-time split.
+
+    Thread notes: the LRU, memoized tables/trees, and stats are lock-
+    protected; concurrent misses on the same uncached triple may duplicate
+    the (idempotent) tier-2/3 work, with one winner filling the LRU."""
+
+    def __init__(self, store: Optional[ArtifactStore] = None,
+                 maxsize: int = 4096):
+        self.store = store
+        self.maxsize = maxsize
+        self.stats = DispatchStats()
+        self._lru: "OrderedDict[DispatchKey, Candidate]" = OrderedDict()
+        # (family, machine) -> (raw payload, leaves parsed once) or None
+        self._tables: Dict[Tuple[str, str],
+                           Optional[Tuple[Dict[str, Any],
+                                          Dict[int, Leaf]]]] = {}
+        self._trees: Dict[str, Optional[List[Leaf]]] = {}
+        self._lock = threading.Lock()
+
+    # -- public API ----------------------------------------------------------
+    def best_variant(self, family: FamilySpec, machine: MachineDescription,
+                     data: Mapping[str, int]) -> Candidate:
+        key: DispatchKey = (family.name, machine.name,
+                            tuple(sorted((k, int(v)) for k, v in data.items())))
+        with self._lock:
+            hit = self._lru.get(key)
+            if hit is not None:
+                self._lru.move_to_end(key)
+                self.stats.memory_hits += 1
+                return hit
+
+        cand = self._from_disk(family, machine, data)
+        if cand is None:
+            cold = rank_candidates(family, machine, data,
+                                   leaves=self._tree(family))[0]
+
+        with self._lock:
+            if cand is not None:
+                self.stats.disk_hits += 1
+            else:
+                self.stats.cold_builds += 1
+                cand = cold
+            self._lru[key] = cand
+            self._lru.move_to_end(key)
+            while len(self._lru) > self.maxsize:
+                self._lru.popitem(last=False)
+        return cand
+
+    def clear(self) -> None:
+        with self._lock:
+            self._lru.clear()
+            self._tables.clear()
+            self._trees.clear()
+            self.stats.reset()
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    # -- tier 2: precompiled dispatch tables ---------------------------------
+    def _table(self, family_name: str, machine_name: str
+               ) -> Optional[Tuple[Dict[str, Any], Dict[int, Leaf]]]:
+        """Load + parse a dispatch table once per (family, machine)."""
+        if self.store is None:
+            return None
+        tkey = (family_name, machine_name)
+        with self._lock:
+            if tkey in self._tables:
+                return self._tables[tkey]
+        parsed = None
+        payload = self.store.load_dispatch(family_name, machine_name)
+        if payload is not None:
+            try:
+                # leaves are keyed by index in the *full* tree
+                # (see compile.build_dispatch_table)
+                leaves = {int(i): serde.obj_to_leaf(obj)
+                          for i, obj in payload["leaves"].items()}
+                parsed = (payload, leaves)
+            except (serde.ArtifactFormatError, AttributeError, KeyError,
+                    TypeError, ValueError):
+                parsed = None
+        with self._lock:
+            self._tables[tkey] = parsed
+        return parsed
+
+    def _from_disk(self, family: FamilySpec, machine: MachineDescription,
+                   data: Mapping[str, int]) -> Optional[Candidate]:
+        loaded = self._table(family.name, machine.name)
+        if loaded is None:
+            return None
+        table, leaves = loaded
+        if table.get("machine_bindings") != machine.bindings():
+            return None                       # stale table for a renamed host
+        entries = table.get("buckets", {}).get(bucket_key(data))
+        if not entries:
+            return None
+        binding = {**machine.bindings(),
+                   **{k: int(v) for k, v in data.items()}}
+        for entry in entries:                 # pre-ranked, best first
+            idx = int(entry["leaf_index"])
+            leaf = leaves.get(idx)
+            if leaf is None:
+                return None
+            asg = {k: int(v) for k, v in entry["assignment"].items()}
+            C = leaf.constraints.subs({**binding, **asg})
+            if C.check(samples=64) is Verdict.INCONSISTENT:
+                continue                      # infeasible for the exact shape
+            return Candidate(leaf_index=idx, plan=leaf.plan, assignment=asg,
+                             score=float(entry["score"]))
+        return None
+
+    # -- tier 3 support: disk tree beats in-process rebuild ------------------
+    def _tree(self, family: FamilySpec) -> Optional[Sequence[Leaf]]:
+        if self.store is None:
+            return None
+        with self._lock:
+            if family.name in self._trees:
+                return self._trees[family.name]
+        tree = self.store.load_tree(family.name)
+        with self._lock:
+            self._trees[family.name] = tree
+        return tree
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default cache (what core.select.best_variant routes through).
+# ---------------------------------------------------------------------------
+_default_cache: Optional[DispatchCache] = None
+_default_lock = threading.Lock()
+
+
+def get_default_cache() -> DispatchCache:
+    global _default_cache
+    with _default_lock:
+        if _default_cache is None:
+            import os
+            root = os.environ.get("REPRO_ARTIFACT_DIR", "artifacts")
+            store = ArtifactStore(root) if os.path.isdir(root) else None
+            _default_cache = DispatchCache(store=store)
+        return _default_cache
+
+
+def set_default_cache(cache: Optional[DispatchCache]) -> None:
+    """Install (or with ``None`` reset) the process-wide dispatch cache."""
+    global _default_cache
+    with _default_lock:
+        _default_cache = cache

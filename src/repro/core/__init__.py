@@ -20,7 +20,8 @@ from .counters import Counter, CounterKind, performance, resource
 from .strategies import Strategy, level_strategy, toggle_strategy
 from .comprehensive import (comprehensive_optimization, comprehensive_tree,
                             initial_quintuple, optimize, tree_report)
-from .select import Candidate, best_variant, case_table, enumerate_candidates
+from .select import (STATS, Candidate, SelectStats, best_variant, case_table,
+                     enumerate_candidates, rank_candidates)
 
 __all__ = [
     "Poly", "V", "Constraint", "ConstraintSystem", "Rel", "Verdict",
@@ -30,5 +31,5 @@ __all__ = [
     "resource", "Strategy", "level_strategy", "toggle_strategy",
     "comprehensive_optimization", "comprehensive_tree", "initial_quintuple",
     "optimize", "tree_report", "Candidate", "best_variant", "case_table",
-    "enumerate_candidates",
+    "enumerate_candidates", "rank_candidates", "SelectStats", "STATS",
 ]

@@ -330,3 +330,14 @@ class ConstraintSystem:
 
     def __len__(self) -> int:
         return len(self.atoms)
+
+    # Value equality so artifact round-trips can assert leaf-for-leaf
+    # identity.  Atom *order* is compared: conjunction semantics are
+    # order-free, but serialization must preserve structure exactly.
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, ConstraintSystem):
+            return NotImplemented
+        return self.atoms == other.atoms
+
+    def __hash__(self) -> int:
+        return hash(tuple(self.atoms))

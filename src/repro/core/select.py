@@ -29,6 +29,24 @@ from .params import MachineDescription
 from .plan import FamilySpec, KernelPlan, Leaf
 
 
+@dataclass
+class SelectStats:
+    """Process-wide instrumentation for the dispatch layers.
+
+    ``enumerate_calls`` counts *cold* candidate enumerations — the expensive
+    tree-search path the artifact/dispatch cache exists to amortize away.
+    Tests assert on it; benchmarks report it.
+    """
+
+    enumerate_calls: int = 0
+
+    def reset(self) -> None:
+        self.enumerate_calls = 0
+
+
+STATS = SelectStats()
+
+
 @dataclass(frozen=True)
 class Candidate:
     """A fully bound kernel variant ready to instantiate."""
@@ -84,10 +102,20 @@ def _perf_score(family: FamilySpec, plan: KernelPlan,
 def enumerate_candidates(family: FamilySpec,
                          machine: MachineDescription,
                          data: Mapping[str, int],
-                         max_per_leaf: int = 512) -> List[Candidate]:
+                         max_per_leaf: int = 512,
+                         leaves: Optional[Sequence[Leaf]] = None
+                         ) -> List[Candidate]:
+    """Cold-path enumeration over the comprehensive tree.
+
+    ``leaves`` lets the artifact layer supply a disk-loaded tree instead of
+    rebuilding in-process (the offline/online split of paper §1).
+    """
+    STATS.enumerate_calls += 1
     binding = {**machine.bindings(), **{k: int(v) for k, v in data.items()}}
+    if leaves is None:
+        leaves = comprehensive_tree(family)
     out: List[Candidate] = []
-    for idx, leaf, C in specialize(comprehensive_tree(family), machine, data):
+    for idx, leaf, C in specialize(leaves, machine, data):
         names = sorted(leaf.plan.program_params)
         domains = [leaf.plan.program_params[n].feasible() for n in names]
         count = 0
@@ -111,24 +139,45 @@ def enumerate_candidates(family: FamilySpec,
     return out
 
 
-def best_variant(family: FamilySpec,
-                 machine: MachineDescription,
-                 data: Mapping[str, int],
-                 runner: Optional[Callable[[Candidate], float]] = None,
-                 top_k: int = 4) -> Candidate:
-    """Pick the kernel variant for this machine + data.
-
-    ``runner`` (optional) measures wall-clock seconds for a candidate; when
-    provided, the offline model shortlists ``top_k`` and the runner decides
-    (classic auto-tuning, paper §1).  Without it the offline model decides —
-    that is the fully-static path used on the dry-run target.
-    """
-    cands = enumerate_candidates(family, machine, data)
+def rank_candidates(family: FamilySpec,
+                    machine: MachineDescription,
+                    data: Mapping[str, int],
+                    leaves: Optional[Sequence[Leaf]] = None,
+                    max_per_leaf: int = 512) -> List[Candidate]:
+    """Enumerate + sort (best first).  Raises if nothing is feasible."""
+    cands = enumerate_candidates(family, machine, data,
+                                 max_per_leaf=max_per_leaf, leaves=leaves)
     if not cands:
         raise ValueError(
             f"no feasible kernel variant for family={family.name} "
             f"machine={machine.name} data={dict(data)}")
     cands.sort(key=lambda c: c.score, reverse=True)
+    return cands
+
+
+def best_variant(family: FamilySpec,
+                 machine: MachineDescription,
+                 data: Mapping[str, int],
+                 runner: Optional[Callable[[Candidate], float]] = None,
+                 top_k: int = 4,
+                 *, use_cache: bool = True) -> Candidate:
+    """Pick the kernel variant for this machine + data.
+
+    The fully-static path (no ``runner``) is served by the process-wide
+    :class:`repro.artifacts.dispatch.DispatchCache` — memory LRU, then disk
+    artifact, then cold rebuild — so a recurring (family, machine, data)
+    triple costs a dict lookup, not a tree search.  ``use_cache=False`` forces
+    the cold path (the cache itself uses it, as do A/B tests).
+
+    ``runner`` (optional) measures wall-clock seconds for a candidate; when
+    provided, the offline model shortlists ``top_k`` and the runner decides
+    (classic auto-tuning, paper §1).  Empirical timings are machine-state
+    dependent, so that path bypasses the cache.
+    """
+    if runner is None and use_cache:
+        from ..artifacts.dispatch import get_default_cache
+        return get_default_cache().best_variant(family, machine, data)
+    cands = rank_candidates(family, machine, data)
     if runner is None:
         return cands[0]
     short = cands[:top_k]

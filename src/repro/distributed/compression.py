@@ -39,7 +39,9 @@ def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
 def _ring_allreduce_int8(x: jax.Array, key: jax.Array, axis: str
                          ) -> jax.Array:
     """All-reduce of f32 ``x`` over ``axis`` moving int8 on the wire."""
-    n = jax.lax.axis_size(axis)
+    # jax.lax.axis_size is not available on every supported jax; psum of 1
+    # over the axis is the portable spelling of the same number.
+    n = int(jax.lax.psum(1, axis))
     idx = jax.lax.axis_index(axis)
     q, scale = _quantize(x, jax.random.fold_in(key, idx))
     acc = _dequantize(q, scale)           # own (quantized) contribution

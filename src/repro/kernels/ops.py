@@ -12,14 +12,13 @@ so CPU tests exercise the same decision path the TPU build would take.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Mapping, Optional
+from typing import Mapping, Optional
 
 import jax
-import jax.numpy as jnp
 
+from ..artifacts.dispatch import get_default_cache
 from ..core.params import MachineDescription, TPU_V5E
-from ..core.select import Candidate, best_variant
+from ..core.select import Candidate
 from . import ref
 from .flash_attention import FAMILY as FLASH_FAMILY
 from .jacobi1d import FAMILY as JACOBI_FAMILY
@@ -38,17 +37,15 @@ def _resolve_impl(impl: str) -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
-@functools.lru_cache(maxsize=512)
-def _select(family_name: str, machine_name: str, data_items) -> Candidate:
-    machine = (TPU_V5E if machine_name == TPU_V5E.name
-               else __import__("repro.core.params", fromlist=["MACHINES"]
-                               ).MACHINES[machine_name])
-    return best_variant(FAMILIES[family_name], machine, dict(data_items))
-
-
 def select(family_name: str, data: Mapping[str, int],
            machine: MachineDescription = TPU_V5E) -> Candidate:
-    return _select(family_name, machine.name, tuple(sorted(data.items())))
+    """Resolve the kernel variant through the process-wide DispatchCache.
+
+    Steady-state (the serving hot path) this is one LRU lookup; a cache miss
+    falls back to the precompiled per-machine dispatch artifact, and only a
+    shape never compiled offline pays for tree enumeration."""
+    return get_default_cache().best_variant(FAMILIES[family_name], machine,
+                                            data)
 
 
 # -- matmul -------------------------------------------------------------------

@@ -57,6 +57,41 @@ def _optimizer_for(cfg):
     return make_optimizer(cfg.optimizer, warmup_cosine(3e-4, 100, 10_000))
 
 
+def kernel_dispatch_record(cfg, shape) -> Dict[str, Any]:
+    """Resolve the cell's kernel variants through the artifact DispatchCache.
+
+    This is the dry-run view of the offline/online split: with compiled
+    artifacts present (``REPRO_ARTIFACT_DIR`` / ``./artifacts``) every entry
+    is a table lookup; without them it is a one-time in-process build.  The
+    record lands in the cell JSON so the roofline can tie collective/compute
+    numbers to the exact kernel variants the TPU build would instantiate."""
+    from repro.artifacts.dispatch import get_default_cache
+    from repro.kernels.ops import FAMILIES, select
+    from repro.core.params import TPU_V5E
+    rec: Dict[str, Any] = {}
+    queries = {
+        "flash_attention": {"SQ": shape.seq_len, "HD": cfg.hd},
+        "matmul": {"M": shape.seq_len, "N": cfg.d_ff or 4 * cfg.d_model,
+                   "K": cfg.d_model},
+    }
+    for fam_name, data in queries.items():
+        if fam_name not in FAMILIES:
+            continue
+        try:
+            cand = select(fam_name, data, TPU_V5E)
+        except ValueError as e:
+            rec[fam_name] = {"status": "INFEASIBLE", "error": str(e)}
+            continue
+        rec[fam_name] = {
+            "data": dict(data),
+            "plan": cand.plan.describe(),
+            "assignment": dict(cand.assignment),
+            "score": cand.score,
+        }
+    rec["cache"] = get_default_cache().stats.as_dict()
+    return rec
+
+
 def _np(x):
     return None if x is None else float(x)
 
@@ -67,6 +102,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                overrides: Optional[Dict[str, Any]] = None,
                microbatches: Optional[int] = None,
                zero2_acc: bool = False,
+               kernel_table: bool = False,
                tag: str = "") -> Dict[str, Any]:
     """Lower + compile one cell; return the roofline-relevant record.
 
@@ -175,7 +211,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         rec["compile_s"] = round(time.time() - t1, 1)
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_analysis.cost_analysis_dict(compiled)
     rec["status"] = "OK"
     rec["devices"] = n_dev
     rec["memory"] = {
@@ -194,6 +230,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     hlo = compiled.as_text()
     rep = hlo_analysis.collective_report(hlo, n_dev)
     rec["collectives"] = rep.summary()
+    if kernel_table:
+        rec["kernel_dispatch"] = kernel_dispatch_record(cfg, shape)
     if keep_hlo:
         rec["hlo_len"] = len(hlo)
         os.makedirs(OUT_DIR, exist_ok=True)
@@ -210,12 +248,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              overrides: Optional[Dict[str, Any]] = None,
              microbatches: Optional[int] = None,
              zero2_acc: bool = False,
+             kernel_table: bool = False,
              tag: str = "") -> Dict[str, Any]:
     try:
         rec = lower_cell(arch, shape_name, multi_pod=multi_pod,
                          probe_layers=probe_layers, keep_hlo=keep_hlo,
                          overrides=overrides, microbatches=microbatches,
-                         zero2_acc=zero2_acc, tag=tag)
+                         zero2_acc=zero2_acc, kernel_table=kernel_table,
+                         tag=tag)
     except Exception as e:                                    # noqa: BLE001
         rec = {"arch": arch, "shape": shape_name,
                "mesh": "2x16x16" if multi_pod else "16x16",
@@ -248,6 +288,9 @@ def main() -> None:
     ap.add_argument("--param-dtype", type=str, default=None)
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--zero2-acc", action="store_true")
+    ap.add_argument("--kernel-table", action="store_true",
+                    help="record per-family kernel dispatch (artifact cache) "
+                         "in the cell JSON")
     ap.add_argument("--tag", type=str, default="",
                     help="suffix for the output JSON (variant runs)")
     args = ap.parse_args()
@@ -275,7 +318,8 @@ def main() -> None:
         rec = run_cell(arch, shape, args.multi_pod, args.probe_layers,
                        args.keep_hlo, overrides=overrides or None,
                        microbatches=args.microbatches,
-                       zero2_acc=args.zero2_acc, tag=args.tag)
+                       zero2_acc=args.zero2_acc,
+                       kernel_table=args.kernel_table, tag=args.tag)
         status = rec["status"]
         extra = ""
         if status == "OK":

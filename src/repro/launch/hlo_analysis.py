@@ -38,6 +38,17 @@ _TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
 _CALL_RE = re.compile(r"(?:calls|to_apply|branch_computations)="
                       r"\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns one dict; newer returns a one-element list of dicts
+    (one per partition).  Callers always want the flat dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,\s]+)\}")
 # iota form: replica_groups=[G,n]<=[...] (optionally with T(perm)): n per group
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[[0-9,]+\]")

@@ -25,6 +25,9 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--warm-kernels", action="store_true",
+                    help="pre-resolve kernel-variant dispatch at engine "
+                         "start (uses compiled artifacts when present)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -33,7 +36,10 @@ def main() -> None:
                          "see tests/test_serving.py")
     params, _ = init_model(jax.random.PRNGKey(args.seed), cfg)
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
-                      max_len=args.max_len)
+                      max_len=args.max_len, warm_kernels=args.warm_kernels)
+    if eng.kernel_plan:
+        for name, cand in eng.kernel_plan.items():
+            print(f"kernel {name}: {cand.describe()}")
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()

@@ -22,11 +22,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.params import MachineDescription, TPU_V5E
 from ..models import init_cache
 from ..models.config import ModelConfig
 from .steps import build_serve_steps, greedy_sample
 
 PyTree = Any
+
+
+def warm_kernel_dispatch(cfg: ModelConfig, *,
+                         machine: MachineDescription = TPU_V5E,
+                         max_len: int = 512) -> Dict[str, Any]:
+    """Pre-resolve the kernel variants this model's serve path will ask for.
+
+    Serving traffic hits the same (family, machine, shape) triples millions
+    of times; resolving them once at engine start — ideally from the disk
+    artifacts compiled by ``scripts/compile_artifacts.py`` — keeps every
+    later ``select`` call an LRU hit, so no request ever pays for tree
+    enumeration.  Returns {description: Candidate} for observability.
+    """
+    from ..kernels.ops import select
+    picks: Dict[str, Any] = {}
+    d, hd = cfg.d_model, cfg.hd
+    for sq in {max_len, 2 * max_len}:
+        picks[f"flash_attention@SQ{sq}"] = select(
+            "flash_attention", {"SQ": sq, "HD": hd}, machine)
+    for m, n, k in ((max_len, cfg.d_ff or 4 * d, d),     # MLP up-projection
+                    (max_len, d, cfg.d_ff or 4 * d),     # MLP down-projection
+                    (max_len, cfg.heads * hd, d)):       # QKV projection
+        picks[f"matmul@{m}x{n}x{k}"] = select(
+            "matmul", {"M": m, "N": n, "K": k}, machine)
+    return picks
 
 
 @dataclass
@@ -41,11 +67,17 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
-                 max_batch: int = 8, max_len: int = 512):
+                 max_batch: int = 8, max_len: int = 512,
+                 warm_kernels: bool = False,
+                 machine: MachineDescription = TPU_V5E):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        # resolve kernel-variant dispatch up front (artifact/LRU warm-up)
+        self.kernel_plan = (warm_kernel_dispatch(cfg, machine=machine,
+                                                 max_len=max_len)
+                            if warm_kernels else None)
         prefill_step, decode_step = build_serve_steps(cfg)
         # per-slot prefill: batch dim 1 keeps the compiled shape stable
         self._prefill = jax.jit(prefill_step)

@@ -8,3 +8,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    # Registered in pyproject.toml too; re-register here so the marker is
+    # known even when pytest is invoked from outside the repo root.  The CI
+    # fast tier deselects these with ``-m "not slow"``; the nightly job runs
+    # the full suite with ``-m "slow or not slow"``.
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running model/system tests "
+        "(excluded from the CI fast tier via -m 'not slow')")

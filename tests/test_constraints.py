@@ -8,6 +8,10 @@ this).  CONSISTENT must come with a real witness.
 import itertools
 from fractions import Fraction
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.constraints import Constraint, ConstraintSystem, Rel, Verdict

@@ -139,6 +139,7 @@ def test_chunked_sdpa_equals_dense():
                                    rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_ring_cache_equals_full_cache_decode():
     """Windowed ring cache must produce the same logits as a full cache."""
     cfg = get_smoke_config("hymba_1p5b")          # window=32

@@ -2,6 +2,9 @@
 from fractions import Fraction
 
 import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.polynomial import Poly, V

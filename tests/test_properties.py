@@ -1,5 +1,9 @@
 """Hypothesis property tests on system-level invariants (fast, pure CPU)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.data import DataConfig, SyntheticLM

@@ -21,6 +21,7 @@ def _reference_greedy(cfg, params, prompt, max_new):
     return out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["yi_6b", "mamba2_130m", "hymba_1p5b"])
 def test_engine_matches_reference(arch):
     cfg = get_smoke_config(arch)

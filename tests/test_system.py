@@ -37,6 +37,7 @@ def test_training_loss_decreases():
     assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
 
 
+@pytest.mark.slow
 def test_resume_is_bit_exact(tmp_path):
     """Crash at step 12, restore at 10, replay: final loss must equal the
     uninterrupted run (stateless data + checkpointed state => exact)."""
@@ -71,6 +72,7 @@ def test_resume_is_bit_exact(tmp_path):
     np.testing.assert_allclose(final_ft, final_ref, rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_paper_claim_params_depend_on_input_size():
     """Table 1's headline: the best block parameters shift with input size.
     We assert the framework *can* express this: the offline selector returns
@@ -96,6 +98,7 @@ def test_paper_claim_params_depend_on_input_size():
         small.leaf_index != large.leaf_index
 
 
+@pytest.mark.slow
 def test_quickstart_example_runs():
     import subprocess, sys
     root = os.path.join(os.path.dirname(__file__), "..")
