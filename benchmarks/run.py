@@ -6,10 +6,18 @@ the comprehensive tree's offline performance model, which is the mechanism
 the paper evaluates.  CSV columns: name,us_per_call,derived.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run --only dispatch,compile \
+        --json BENCH_dispatch.json        # machine-readable, CI gate input
+
+``--json`` writes every measured row as ``{"rows": [{name, us, derived}]}``
+(plus meta); ``scripts/check_bench.py`` compares that against the committed
+``benchmarks/baseline.json`` and fails CI on a >2x cold-dispatch regression.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import tempfile
 import time
 
 import numpy as np
@@ -99,7 +107,9 @@ def bench_dispatch_cache(quick=False):
 
     Derived column reports the speedup — the number that justifies shipping
     precompiled artifacts for serving-style traffic where the same
-    (family, machine, shape) triple recurs millions of times."""
+    (family, machine, shape) triple recurs millions of times.  The cold row
+    is the compiled symbolic core's headline number (vectorized candidate
+    enumeration; was ~6.4s with per-candidate exact Fraction arithmetic)."""
     from repro.artifacts.dispatch import DispatchCache
     from repro.core.select import STATS
     cache = DispatchCache()
@@ -115,11 +125,44 @@ def bench_dispatch_cache(quick=False):
     warm_us = (time.perf_counter() - t0) * 1e6 / iters
     assert warm == cold and STATS.enumerate_calls == 1
     return [
-        ("dispatch_cold_matmul", cold_us, f"best={cold.describe()}"),
+        ("dispatch_cold_matmul", cold_us,
+         f"best={cold.describe()} rows={STATS.rows_screened}"),
         ("dispatch_warm_matmul", warm_us,
          f"speedup={cold_us / max(warm_us, 1e-9):.0f}x "
          f"enumerate_calls={STATS.enumerate_calls}"),
     ]
+
+
+def bench_dispatch_reference(quick=False):
+    """The pre-compiled-core exact enumeration, for the speedup column."""
+    from repro.core.select import enumerate_candidates
+    n = 512 if quick else 1024
+    data = {"M": n, "N": n, "K": n}
+    t0 = time.perf_counter()
+    cands = enumerate_candidates(MATMUL, TPU_V5E, data, use_compiled=False)
+    ref_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    enumerate_candidates(MATMUL, TPU_V5E, data, use_compiled=True)
+    fast_us = (time.perf_counter() - t0) * 1e6
+    return [("dispatch_reference_matmul", ref_us,
+             f"cands={len(cands)} compiled={fast_us:.0f}us "
+             f"speedup={ref_us / max(fast_us, 1e-9):.0f}x")]
+
+
+def bench_compile_sweep(quick=False):
+    """Offline ``compile_family`` sweep (what scripts/compile_artifacts.py
+    pays per family x machine x bucket) — the compiled core's other
+    beneficiary."""
+    from repro.artifacts import ArtifactStore, compile_family
+    with tempfile.TemporaryDirectory() as tmp:
+        t0 = time.perf_counter()
+        report = compile_family(MATMUL, ArtifactStore(tmp),
+                                machines=[TPU_V5E], quick=quick)
+        us = (time.perf_counter() - t0) * 1e6
+    return [("compile_sweep_matmul", us,
+             f"buckets={report['dispatch'][TPU_V5E.name]['buckets']} "
+             f"enumerate_calls={report['enumerate_calls']} "
+             f"rows={report['rows_screened']}")]
 
 
 def bench_tree_build():
@@ -160,24 +203,60 @@ def bench_lm_step(quick=False):
     return rows
 
 
+# Named groups for --only filtering (comma-separated exact names).
+BENCH_GROUPS = (
+    ("table1", bench_table1_matmul),
+    ("jacobi", bench_table2_jacobi),
+    ("transpose", bench_table3_transpose),
+    ("matadd", bench_fig2_matadd),
+    ("dispatch", bench_dispatch_cache),
+    ("dispatch_reference", bench_dispatch_reference),
+    ("compile", bench_compile_sweep),
+    ("treebuild", lambda quick: bench_tree_build()),
+    ("lm", bench_lm_step),
+)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated group names to run "
+                         f"(one of: {', '.join(n for n, _ in BENCH_GROUPS)}); "
+                         "implies --skip-roofline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as machine-readable JSON "
+                         "(scripts/check_bench.py gates CI on it)")
     args = ap.parse_args()
 
-    print("name,us_per_call,derived")
-    for fn in (bench_table1_matmul, bench_table2_jacobi,
-               bench_table3_transpose, bench_fig2_matadd,
-               bench_dispatch_cache):
-        for name, us, derived in fn(args.quick):
-            print(f"{name},{us:.1f},{derived}", flush=True)
-    for name, us, derived in bench_tree_build():
-        print(f"{name},{us:.1f},{derived}", flush=True)
-    for name, us, derived in bench_lm_step(args.quick):
-        print(f"{name},{us:.1f},{derived}", flush=True)
+    selected = None
+    if args.only:
+        wanted = [w.strip() for w in args.only.split(",") if w.strip()]
+        known = {n for n, _ in BENCH_GROUPS}
+        unknown = [w for w in wanted if w not in known]
+        if unknown:
+            ap.error(f"unknown --only group(s) {unknown}; "
+                     f"have {sorted(known)}")
+        selected = [(n, f) for n, f in BENCH_GROUPS if n in wanted]
+    groups = selected if selected is not None else list(BENCH_GROUPS)
 
-    if not args.skip_roofline:
+    rows = []
+    print("name,us_per_call,derived")
+    for _, fn in groups:
+        for name, us, derived in fn(args.quick):
+            rows.append({"name": name, "us": us, "derived": derived})
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+    if args.json:
+        payload = {"meta": {"quick": bool(args.quick),
+                            "only": args.only or ""},
+                   "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(rows)} rows to {args.json}", flush=True)
+
+    if not args.skip_roofline and selected is None:
         print("\n# Roofline (from dry-run artifacts; see EXPERIMENTS.md)")
         try:
             from . import roofline

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Gate CI on benchmark regressions against a committed baseline.
+
+Compares a ``benchmarks/run.py --json`` output file against
+``benchmarks/baseline.json`` and exits non-zero when a gated row regresses
+by more than ``--max-ratio`` (wall-time ratio, default 2.0).  Rows absent
+from the measurement fail loudly — a silently skipped benchmark is a
+regression in itself.  Rows faster than the baseline print an invitation to
+ratchet the committed number down.
+
+    python scripts/check_bench.py BENCH_dispatch.json \
+        --baseline benchmarks/baseline.json \
+        --key dispatch_cold_matmul --max-ratio 2.0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {row["name"]: row for row in payload.get("rows", [])}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("measured", help="JSON file from benchmarks/run.py --json")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--key", action="append", default=None,
+                    help="row name to gate (repeatable; default: every key "
+                         "in the baseline file)")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when measured_us > ratio * baseline_us")
+    args = ap.parse_args(argv)
+
+    measured = load_rows(args.measured)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    keys = args.key if args.key else sorted(baseline.get("rows", {}))
+
+    failures = 0
+    for key in keys:
+        base = baseline.get("rows", {}).get(key)
+        if base is None:
+            print(f"[GATE FAIL] {key}: not in baseline {args.baseline}",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        row = measured.get(key)
+        if row is None:
+            print(f"[GATE FAIL] {key}: missing from {args.measured} "
+                  f"(benchmark did not run?)", file=sys.stderr)
+            failures += 1
+            continue
+        us, base_us = float(row["us"]), float(base["us"])
+        ratio = us / base_us if base_us > 0 else float("inf")
+        if ratio > args.max_ratio:
+            print(f"[GATE FAIL] {key}: {us:.1f}us vs baseline "
+                  f"{base_us:.1f}us ({ratio:.2f}x > {args.max_ratio:.2f}x)",
+                  file=sys.stderr)
+            failures += 1
+        else:
+            note = " (consider ratcheting the baseline down)" \
+                if ratio < 0.5 else ""
+            print(f"[GATE OK]   {key}: {us:.1f}us vs baseline "
+                  f"{base_us:.1f}us ({ratio:.2f}x){note}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

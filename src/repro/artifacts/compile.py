@@ -19,7 +19,7 @@ from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence
 from ..core.comprehensive import comprehensive_tree
 from ..core.params import MACHINES, MachineDescription
 from ..core.plan import FamilySpec
-from ..core.select import rank_candidates, specialize
+from ..core.select import STATS, rank_candidates, specialize
 from . import serde
 from .dispatch import bucket_key
 from .store import ArtifactStore
@@ -109,15 +109,20 @@ def compile_family(family: FamilySpec, store: ArtifactStore,
         DEFAULT_DATA_GRIDS.get(family.name, [])
     if quick:
         shapes = shapes[:1]
+    rows0, calls0 = STATS.rows_screened, STATS.enumerate_calls
     for machine in (machines if machines is not None else MACHINES.values()):
+        tm = time.perf_counter()
         table = build_dispatch_table(family, machine, shapes, top_k=top_k)
         path = store.save_dispatch(table)
         report["dispatch"][machine.name] = {
             "path": str(path),
             "kept_leaves": len(table["leaves"]),
             "buckets": len(table["buckets"]),
+            "seconds": round(time.perf_counter() - tm, 3),
         }
     report["seconds"] = round(time.perf_counter() - t0, 3)
+    report["enumerate_calls"] = STATS.enumerate_calls - calls0
+    report["rows_screened"] = STATS.rows_screened - rows0
     return report
 
 

@@ -160,16 +160,28 @@ class DispatchCache:
         binding = {**machine.bindings(),
                    **{k: int(v) for k, v in data.items()}}
         for entry in entries:                 # pre-ranked, best first
-            idx = int(entry["leaf_index"])
+            try:
+                idx = int(entry["leaf_index"])
+                asg = {k: int(v) for k, v in entry["assignment"].items()}
+                score = float(entry["score"])
+            except (AttributeError, KeyError, TypeError, ValueError):
+                return None                   # mangled entry => cache miss
             leaf = leaves.get(idx)
             if leaf is None:
                 return None
-            asg = {k: int(v) for k, v in entry["assignment"].items()}
-            C = leaf.constraints.subs({**binding, **asg})
-            if C.check(samples=64) is Verdict.INCONSISTENT:
+            full = {**binding, **asg}
+            # fully-bound specialization decides feasibility exactly (and
+            # is memoized); only unclassifiable systems pay the exact check
+            cs = leaf.constraints.specialize(full)
+            if cs.decided:
+                infeasible = cs.infeasible
+            else:
+                infeasible = (leaf.constraints.subs(full).check(samples=64)
+                              is Verdict.INCONSISTENT)
+            if infeasible:
                 continue                      # infeasible for the exact shape
-            return Candidate(leaf_index=idx, plan=leaf.plan, assignment=asg,
-                             score=float(entry["score"]))
+            return Candidate(leaf_index=idx, plan=leaf.plan,
+                             assignment=asg, score=score)
         return None
 
     # -- tier 3 support: disk tree beats in-process rebuild ------------------

@@ -3,6 +3,8 @@
 Public API:
 
 - :mod:`repro.core.polynomial`    — exact multivariate polynomials over Q
+- :mod:`repro.core.compiled`      — compiled batch evaluation (NumPy) of
+  polynomials and specialized constraint systems
 - :mod:`repro.core.constraints`   — semi-algebraic systems + consistency
 - :mod:`repro.core.params`        — machine/program/data parameter symbols
 - :mod:`repro.core.plan`          — kernel plans + the optimization quintuple
@@ -12,7 +14,9 @@ Public API:
 - :mod:`repro.core.select`        — load-time leaf selection + auto-tuning
 """
 from .polynomial import Poly, V
-from .constraints import Constraint, ConstraintSystem, Rel, Verdict
+from .compiled import CompiledPoly, CompiledSystem, specialize_system
+from .constraints import (Constraint, ConstraintSystem, Rel, Verdict,
+                          is_integer_var)
 from .params import (MachineDescription, MACHINES, TPU_V5E, PAPER_M2050,
                      ParamKind, ParamSymbol)
 from .plan import FamilySpec, KernelPlan, Leaf, ParamDomain, Quintuple
@@ -24,7 +28,8 @@ from .select import (STATS, Candidate, SelectStats, best_variant, case_table,
                      enumerate_candidates, rank_candidates)
 
 __all__ = [
-    "Poly", "V", "Constraint", "ConstraintSystem", "Rel", "Verdict",
+    "Poly", "V", "CompiledPoly", "CompiledSystem", "specialize_system",
+    "Constraint", "ConstraintSystem", "Rel", "Verdict", "is_integer_var",
     "MachineDescription", "MACHINES", "TPU_V5E", "PAPER_M2050",
     "ParamKind", "ParamSymbol", "FamilySpec", "KernelPlan", "Leaf",
     "ParamDomain", "Quintuple", "Counter", "CounterKind", "performance",

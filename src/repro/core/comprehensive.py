@@ -19,6 +19,7 @@ structurally here and re-checked by tests/test_comprehensive.py.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .constraints import Constraint, ConstraintSystem, Verdict
@@ -121,17 +122,31 @@ def comprehensive_optimization(family: FamilySpec,
 
 # ----------------------------------------------------------------------------
 # Cached per-family trees: building the tree is an offline, machine-free step
-# (the whole point of the paper); every runtime caller reuses it.
+# (the whole point of the paper); every runtime caller reuses it.  Leaf
+# identity matters downstream — the compiled-system cache in
+# repro.core.compiled keys on constraint-system identity, so serving the
+# same list object keeps specializations shared across calls.
 # ----------------------------------------------------------------------------
 _TREE_CACHE: Dict[str, List[Leaf]] = {}
+_TREE_LOCK = threading.Lock()
 
 
 def comprehensive_tree(family: FamilySpec,
                        domain_axioms: Sequence[Constraint] = ()) -> List[Leaf]:
     key = family.name + "::" + ";".join(map(repr, domain_axioms))
-    if key not in _TREE_CACHE:
-        _TREE_CACHE[key] = comprehensive_optimization(family, domain_axioms)
-    return _TREE_CACHE[key]
+    with _TREE_LOCK:
+        hit = _TREE_CACHE.get(key)
+    if hit is None:
+        hit = comprehensive_optimization(family, domain_axioms)
+        with _TREE_LOCK:
+            hit = _TREE_CACHE.setdefault(key, hit)
+    return hit
+
+
+def clear_tree_cache() -> None:
+    """Drop memoized trees (tests / families redefined at runtime)."""
+    with _TREE_LOCK:
+        _TREE_CACHE.clear()
 
 
 def tree_report(leaves: Sequence[Leaf]) -> str:

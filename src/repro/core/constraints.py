@@ -26,13 +26,30 @@ the caller keeps the branch: this preserves the paper's coverage property
 from __future__ import annotations
 
 import enum
-import itertools
+import math
 import random
 from dataclasses import dataclass, field
 from fractions import Fraction
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import (TYPE_CHECKING, Dict, Iterable, List, Mapping, Optional,
+                    Tuple)
+
+import numpy as np
 
 from .polynomial import Poly, PolyLike, Scalar
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .compiled import CompiledSystem
+
+# Domain convention (paper hypothesis H1): every parameter ranges over the
+# non-negative integers EXCEPT the performance measures P_i, which are
+# rationals in [0, 1].  Performance-measure symbols are named with this
+# prefix throughout the repo (see core.params PERFORMANCE_SYMBOLS).
+PERF_MEASURE_PREFIX = "P_"
+
+
+def is_integer_var(name: str) -> bool:
+    """True for variables that range over integers under hypothesis H1."""
+    return not name.startswith(PERF_MEASURE_PREFIX)
 
 
 class Rel(enum.Enum):
@@ -107,31 +124,68 @@ class Verdict(enum.Enum):
 _DEFAULT_HI = 1 << 24  # search ceiling for unbounded integer parameters
 
 
+def _log_uniform_int(rng: random.Random, lo: int, hi: int) -> int:
+    """Log-uniform integer in [lo, hi] by rejection sampling.
+
+    Exponents are drawn over [0, (hi - lo + 1).bit_length()] — inclusive of
+    the top, so ``hi`` itself is reachable for every span — and out-of-box
+    values are rejected; clamping them to ``hi`` instead (the old behaviour)
+    silently piled up to half the probability mass on the upper endpoint."""
+    if hi <= lo:
+        return lo
+    bits = (hi - lo + 1).bit_length()
+    for _ in range(16):
+        val = lo + int(2 ** (rng.random() * bits)) - 1
+        if val <= hi:
+            return val
+    return rng.randint(lo, hi)
+
+
 @dataclass
 class Box:
-    """Per-variable closed rational interval [lo, hi]."""
+    """Per-variable rational interval [lo, hi] with open-endpoint flags.
+
+    Strict bounds on *rational* variables (the performance measures) are
+    recorded exactly via the strictness flags; strict bounds on integer
+    variables are tightened to the adjacent integer before they get here
+    (see ``_propagate_bounds``), so they arrive closed."""
 
     lo: Dict[str, Fraction] = field(default_factory=dict)
     hi: Dict[str, Fraction] = field(default_factory=dict)
+    lo_strict: Dict[str, bool] = field(default_factory=dict)
+    hi_strict: Dict[str, bool] = field(default_factory=dict)
 
     def get(self, var: str) -> Tuple[Fraction, Fraction]:
         return (self.lo.get(var, Fraction(0)),
                 self.hi.get(var, Fraction(_DEFAULT_HI)))
 
-    def tighten_lo(self, var: str, val: Fraction) -> None:
+    def tighten_lo(self, var: str, val: Fraction,
+                   strict: bool = False) -> None:
         cur = self.lo.get(var, Fraction(0))
         if val > cur:
             self.lo[var] = val
+            self.lo_strict[var] = strict
+        elif val == cur and strict:
+            self.lo[var] = val
+            self.lo_strict[var] = True
 
-    def tighten_hi(self, var: str, val: Fraction) -> None:
+    def tighten_hi(self, var: str, val: Fraction,
+                   strict: bool = False) -> None:
         cur = self.hi.get(var, Fraction(_DEFAULT_HI))
         if val < cur:
             self.hi[var] = val
+            self.hi_strict[var] = strict
+        elif val == cur and strict:
+            self.hi[var] = val
+            self.hi_strict[var] = True
 
     def empty(self) -> bool:
         for var in set(self.lo) | set(self.hi):
             lo, hi = self.get(var)
             if lo > hi:
+                return True
+            if lo == hi and (self.lo_strict.get(var, False)
+                             or self.hi_strict.get(var, False)):
                 return True
         return False
 
@@ -167,6 +221,13 @@ class ConstraintSystem:
     def subs(self, assignment: Mapping[str, Scalar]) -> "ConstraintSystem":
         return ConstraintSystem(a.subs(assignment) for a in self.atoms)
 
+    def specialize(self, binding: Mapping[str, int]) -> "CompiledSystem":
+        """Partial-evaluate machine+data symbols once; classify residual
+        atoms and return a batched evaluator (memoized per binding).  See
+        :mod:`repro.core.compiled`."""
+        from .compiled import specialize_system
+        return specialize_system(self, binding)
+
     # -- consistency ---------------------------------------------------------
     def _propagate_bounds(self) -> Optional[Box]:
         """Interval box from univariate-linear atoms.  None => inconsistent."""
@@ -192,9 +253,17 @@ class ConstraintSystem:
                     box.tighten_lo(var, bound)
                     box.tighten_hi(var, bound)
                 elif k > 0:  # var >= bound (or >)
-                    box.tighten_lo(var, bound + (Fraction(1, 10**9) if strict else 0))
+                    if strict and is_integer_var(var):
+                        # integer domain: p > b  <=>  p >= floor(b) + 1
+                        box.tighten_lo(var, Fraction(math.floor(bound) + 1))
+                    else:
+                        box.tighten_lo(var, bound, strict=strict)
                 else:        # var <= bound (or <)
-                    box.tighten_hi(var, bound - (Fraction(1, 10**9) if strict else 0))
+                    if strict and is_integer_var(var):
+                        # integer domain: p < b  <=>  p <= ceil(b) - 1
+                        box.tighten_hi(var, Fraction(math.ceil(bound) - 1))
+                    else:
+                        box.tighten_hi(var, bound, strict=strict)
             if box.empty():
                 return None
         return box
@@ -224,20 +293,9 @@ class ConstraintSystem:
                 windows[part] = (lo, hi)
         return any(lo > hi for lo, hi in windows.values())
 
-    def _holds_float(self, assignment: Mapping[str, float]) -> bool:
-        """Float screening (cheap); positives are re-verified exactly."""
-        for a in self.atoms:
-            v = a.poly.eval_float(assignment)
-            if a.rel is Rel.GE and v < -1e-9:
-                return False
-            if a.rel is Rel.GT and v <= 1e-12:
-                return False
-            if a.rel is Rel.EQ and abs(v) > 1e-9:
-                return False
-        return True
-
     def check(self, *, seed: int = 0, samples: int = 4000) -> Verdict:
         if not self.atoms:
+            self._last_witness = {}
             return Verdict.CONSISTENT
         if any(a.trivially_false() for a in self.atoms):
             return Verdict.INCONSISTENT
@@ -248,6 +306,9 @@ class ConstraintSystem:
             return Verdict.INCONSISTENT
         variables = sorted(self.variables())
         if not variables:
+            # every atom constant and none false: the empty assignment is
+            # the witness (witness() reads _last_witness on CONSISTENT)
+            self._last_witness = {}
             return Verdict.CONSISTENT
 
         # --- witness search over the integer lattice inside the box ---------
@@ -276,16 +337,40 @@ class ConstraintSystem:
             return out
 
         cand = {v: candidates(v) for v in variables}
-        rng = random.Random(seed)
-        n_random = min(samples, 600)
-        for trial in range(n_random):
-            asg = {
-                v: cand[v][trial % len(cand[v])] if trial < 8
-                else rng.choice(cand[v])
-                for v in variables
-            }
-            fasg = {k: float(x) for k, x in asg.items()}
-            if self._holds_float(fasg) and self.holds(asg):
+        n_trials = min(samples, 600)
+        if n_trials <= 0:
+            return Verdict.UNKNOWN
+        # Vectorized witness search: generate the whole trial lattice up
+        # front (first 8 trials deterministic, the rest pseudo-random), run
+        # the float screen over all trials at once with the compiled batch
+        # evaluators, and exact-verify candidates in trial order.  Only the
+        # first float-clean trial pays exact Fraction arithmetic.
+        rs = np.random.RandomState(seed)
+        det = min(8, n_trials)
+        idx: Dict[str, np.ndarray] = {}
+        fcols: Dict[str, np.ndarray] = {}
+        for v in variables:
+            vals = cand[v]
+            k = len(vals)
+            ix = np.concatenate([
+                np.arange(det, dtype=np.int64) % k,
+                rs.randint(0, k, size=n_trials - det),
+            ])
+            idx[v] = ix
+            fcols[v] = np.array([float(x) for x in vals])[ix]
+        ok = np.ones(n_trials, dtype=bool)
+        for a in self.atoms:
+            vals = np.broadcast_to(a.poly.compile().eval_batch(fcols),
+                                   (n_trials,))
+            if a.rel is Rel.GE:
+                ok &= vals >= -1e-9
+            elif a.rel is Rel.GT:
+                ok &= vals > 1e-12
+            else:
+                ok &= np.abs(vals) <= 1e-9
+        for t in np.flatnonzero(ok):
+            asg = {v: cand[v][int(idx[v][t])] for v in variables}
+            if self.holds(asg):
                 self._last_witness = dict(asg)
                 return Verdict.CONSISTENT
         return Verdict.UNKNOWN
@@ -318,9 +403,7 @@ class ConstraintSystem:
                 lo_i, hi_i = int(lo), min(int(hi), _DEFAULT_HI)
                 lo_i, hi_i = min(lo_i, hi_i), max(lo_i, hi_i)
                 # log-uniform favours small values (paper domains are sizes)
-                span = max(1, hi_i - lo_i)
-                val = lo_i + int(2 ** (rng.random() * span.bit_length())) - 1
-                asg[v] = Fraction(min(val, hi_i))
+                asg[v] = Fraction(_log_uniform_int(rng, lo_i, hi_i))
             if self.holds(asg):
                 return asg
         return None

@@ -9,9 +9,14 @@ solver in :mod:`repro.core.constraints`.
 Representation: ``{monomial: Fraction}`` where a monomial is a sorted tuple of
 ``(variable_name, exponent)`` pairs with positive exponents.  The empty tuple
 is the constant monomial.
+
+Monomials are interned process-wide: equal monomials share one tuple object,
+so the dict operations that dominate polynomial arithmetic hit the identity
+fast path, and the memoized monomial product below stays small.
 """
 from __future__ import annotations
 
+import functools
 import itertools
 from fractions import Fraction
 from typing import Dict, Iterable, Mapping, Tuple, Union
@@ -21,6 +26,12 @@ Scalar = Union[int, float, Fraction]
 PolyLike = Union["Poly", Scalar]
 
 _ZERO = Fraction(0)
+
+_MONO_INTERN: Dict[Monomial, Monomial] = {(): ()}
+
+
+def _intern_mono(m: Monomial) -> Monomial:
+    return _MONO_INTERN.setdefault(m, m)
 
 
 def _as_fraction(x: Scalar) -> Fraction:
@@ -33,17 +44,18 @@ def _as_fraction(x: Scalar) -> Fraction:
     raise TypeError(f"cannot coerce {type(x)} to Fraction")
 
 
+@functools.lru_cache(maxsize=1 << 16)
 def _mono_mul(a: Monomial, b: Monomial) -> Monomial:
     exps: Dict[str, int] = {}
     for var, e in itertools.chain(a, b):
         exps[var] = exps.get(var, 0) + e
-    return tuple(sorted((v, e) for v, e in exps.items() if e))
+    return _intern_mono(tuple(sorted((v, e) for v, e in exps.items() if e)))
 
 
 class Poly:
     """Immutable exact multivariate polynomial."""
 
-    __slots__ = ("terms",)
+    __slots__ = ("terms", "_compiled")
 
     def __init__(self, terms: Mapping[Monomial, Fraction] | None = None):
         clean: Dict[Monomial, Fraction] = {}
@@ -51,8 +63,9 @@ class Poly:
             for mono, coeff in terms.items():
                 c = _as_fraction(coeff)
                 if c != 0:
-                    clean[mono] = c
+                    clean[_intern_mono(mono)] = c
         object.__setattr__(self, "terms", clean)
+        object.__setattr__(self, "_compiled", None)
 
     # -- constructors ------------------------------------------------------
     @staticmethod
@@ -143,7 +156,25 @@ class Poly:
     # -- evaluation ---------------------------------------------------------
     def subs(self, assignment: Mapping[str, Union[Scalar, "Poly"]]) -> "Poly":
         """Partial or full substitution; values may themselves be Polys."""
-        out = Poly.const(0)
+        if all(not isinstance(v, Poly) for v in assignment.values()):
+            # Numeric-only fast path: fold bound variables straight into the
+            # coefficient dict without building intermediate Polys.
+            out: Dict[Monomial, Fraction] = {}
+            for mono, coeff in self.terms.items():
+                c = coeff
+                residual = mono
+                if any(var in assignment for var, _ in mono):
+                    free = []
+                    for var, exp in mono:
+                        if var in assignment:
+                            c *= _as_fraction(assignment[var]) ** exp
+                        else:
+                            free.append((var, exp))
+                    residual = _intern_mono(tuple(free))
+                prev = out.get(residual)
+                out[residual] = c if prev is None else prev + c
+            return Poly(out)
+        acc = Poly.const(0)
         for mono, coeff in self.terms.items():
             term = Poly.const(coeff)
             for var, exp in mono:
@@ -151,8 +182,8 @@ class Poly:
                     term = term * (Poly.coerce(assignment[var]) ** exp)
                 else:
                     term = term * Poly.var(var, exp)
-            out = out + term
-        return out
+            acc = acc + term
+        return acc
 
     def eval(self, assignment: Mapping[str, Scalar]) -> Fraction:
         """Full numeric evaluation; raises if a variable is missing."""
@@ -175,6 +206,19 @@ class Poly:
                 val *= float(assignment[var]) ** exp
             total += val
         return total
+
+    def compile(self) -> "CompiledPoly":
+        """Lower to a flat coefficient/exponent array program (cached).
+
+        The returned :class:`repro.core.compiled.CompiledPoly` evaluates whole
+        batches of assignments with NumPy and keeps this Poly around for the
+        exact-Fraction single-point fallback."""
+        cp = self._compiled
+        if cp is None:
+            from .compiled import CompiledPoly
+            cp = CompiledPoly(self)
+            object.__setattr__(self, "_compiled", cp)
+        return cp
 
     # -- comparisons / hashing ----------------------------------------------
     def __eq__(self, other) -> bool:

@@ -226,6 +226,24 @@ class MatmulFamily:
         kamort = min(1.0, bk / 512)                       # fewer k revisits
         return fill * ai_norm * wave_eff * (0.5 + 0.5 * kamort)
 
+    def score_batch(self, plan: KernelPlan, v: Mapping[str, object]):
+        """Vectorized twin of ``score`` over NumPy columns (same ops in the
+        same order, so per-row results match the scalar model bit-for-bit)."""
+        import numpy as np
+        bm, bn = np.asarray(v["bm"]), np.asarray(v["bn"])
+        bk, s = np.asarray(v["bk"]), np.asarray(v["s"])
+        M = v.get("M", 4096); N = v.get("N", 4096)
+        mxu = v.get("MXU", 128)
+        cores = max(1, v.get("CORES", 1))
+        bns = bn * s
+        fill = np.minimum(1.0, bm / mxu) * np.minimum(1.0, bn / mxu)
+        ai = (bm * bns) / (bm + bns)
+        ai_norm = np.minimum(1.0, ai / 256.0)
+        waves = (np.ceil(M / bm) * np.ceil(N / bns)) / cores
+        wave_eff = np.minimum(1.0, waves)
+        kamort = np.minimum(1.0, bk / 512)
+        return fill * ai_norm * wave_eff * (0.5 + 0.5 * kamort)
+
     # -- instantiation --------------------------------------------------------
     def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
                     interpret: bool = False) -> Callable:

@@ -80,6 +80,37 @@ def test_format_version_mismatch_is_cache_miss(tmp_path):
     assert store.load_tree(MATMUL.name) is None      # rebuild, never crash
 
 
+def test_stale_dispatch_version_is_cache_miss_not_error(tmp_path):
+    """ROADMAP version policy: a dispatch table from another FORMAT_VERSION
+    must fall through to a cold rebuild — same answer, no exception."""
+    store = ArtifactStore(tmp_path)
+    compile_family(MATMUL, store, machines=[TPU_V5E], shapes=[MM_DATA])
+    path = store.dispatch_path(MATMUL.name, TPU_V5E.name)
+    text = path.read_text().replace(
+        f'"format":{serde.FORMAT_VERSION}', '"format":999999', 1)
+    path.write_text(text)
+    assert store.load_dispatch(MATMUL.name, TPU_V5E.name) is None
+    cache = DispatchCache(store=store)
+    STATS.reset()
+    cand = cache.best_variant(MATMUL, TPU_V5E, MM_DATA)   # must not raise
+    assert cache.stats.disk_hits == 0 and cache.stats.cold_builds == 1
+    assert STATS.enumerate_calls == 1                      # true cold path
+    assert cand == best_variant(MATMUL, TPU_V5E, MM_DATA, use_cache=False)
+
+
+def test_mangled_dispatch_entries_fall_back_to_cold(tmp_path):
+    """A payload that parses as JSON but carries malformed bucket entries
+    (e.g. a renamed ``score`` field) is a cache miss, never an exception."""
+    store = ArtifactStore(tmp_path)
+    compile_family(MATMUL, store, machines=[TPU_V5E], shapes=[MM_DATA])
+    path = store.dispatch_path(MATMUL.name, TPU_V5E.name)
+    path.write_text(path.read_text().replace('"score"', '"scorx"'))
+    cache = DispatchCache(store=store)
+    cand = cache.best_variant(MATMUL, TPU_V5E, MM_DATA)   # must not raise
+    assert cache.stats.cold_builds == 1
+    assert cand == best_variant(MATMUL, TPU_V5E, MM_DATA, use_cache=False)
+
+
 # ---------------------------------------------------------------------------
 # DispatchCache: memory LRU tier
 # ---------------------------------------------------------------------------

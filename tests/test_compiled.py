@@ -1,0 +1,222 @@
+"""Compiled-evaluation subsystem: batch evaluators vs the exact core.
+
+CompiledPoly must agree with exact Fraction evaluation wherever its
+magnitude certificate claims exactness (and fall back where it cannot);
+CompiledSystem.feasible_rows must reproduce, row for row, the INCONSISTENT
+verdicts of the reference ``subs(asg).check()`` path.  Also covers the two
+constraint-solver fixes that ride with the compiled core: exact integer
+tightening of strict bounds and unbiased log-uniform witness sampling.
+"""
+import random
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.core.compiled import (CompiledPoly, CompiledSystem, compile_pair,
+                                 specialize_system)
+from repro.core.constraints import (Constraint, ConstraintSystem, Rel,
+                                    Verdict, _log_uniform_int, is_integer_var)
+from repro.core.polynomial import Poly, V
+
+
+# ---------------------------------------------------------------------------
+# CompiledPoly
+# ---------------------------------------------------------------------------
+
+def test_compiled_poly_matches_exact_eval():
+    p = (Fraction(3, 7) * V("x") ** 2 * V("y") - 5 * V("z")
+         + V("x") * V("z") + Fraction(5, 2))
+    cp = p.compile()
+    assert cp is p.compile()                      # cached on the Poly
+    rng = random.Random(0)
+    rows = [{"x": rng.randrange(0, 50), "y": rng.randrange(0, 50),
+             "z": rng.randrange(0, 50)} for _ in range(64)]
+    cols = {v: np.array([r[v] for r in rows], dtype=np.int64)
+            for v in ("x", "y", "z")}
+    got = cp.eval_batch(cols)
+    want = [float(p.eval(r)) for r in rows]
+    assert np.allclose(got, want, rtol=0, atol=1e-9)
+    # scaled evaluation is exact integer arithmetic under the certificate
+    assert cp.max_abs_scaled({"x": 50, "y": 50, "z": 50}) < 1 << 53
+    scaled = cp.eval_batch_scaled(cols)
+    for s, r in zip(scaled, rows):
+        assert Fraction(int(s)) == p.eval(r) * cp.scale
+
+
+def test_compiled_poly_missing_variable_raises():
+    cp = (V("a") * V("b")).compile()
+    with pytest.raises(KeyError):
+        cp.eval_batch({"a": np.array([1, 2])})
+
+
+def test_compile_pair_shares_scale():
+    a = Fraction(1, 6) * V("x")
+    b = Fraction(1, 4) * V("y") + 1
+    ca, cb = compile_pair(a, b)
+    assert ca.scale == cb.scale == 12
+
+
+def test_certificate_is_conservative():
+    big = 1 << 60
+    p = Poly.const(big) * V("x")
+    cp = p.compile()
+    assert cp.max_abs_scaled({"x": 2}) >= 1 << 53   # refuses to certify
+    assert cp.eval_exact({"x": 2}) == Fraction(big * 2)
+
+
+# ---------------------------------------------------------------------------
+# CompiledSystem: classification + specialize-once decisions
+# ---------------------------------------------------------------------------
+
+def _mask_vs_reference(system, cols, maxvals, n):
+    cs = specialize_system(system, {})
+    assert not cs.fallback
+    mask = cs.feasible_rows(cols, maxvals, n)
+    for r in range(n):
+        asg = {v: int(cols[v][r]) for v in cols}
+        ref = system.subs(asg).check(samples=16) is not Verdict.INCONSISTENT
+        assert bool(mask[r]) == ref, (asg, system)
+    return mask
+
+
+def test_row_atom_screen_matches_reference():
+    C = ConstraintSystem([
+        Constraint.ge(V("V") - 4 * V("x") * V("y")),
+        Constraint.gt(V("x"), 1),
+    ])
+    cs = specialize_system(C, {"V": 64})
+    assert cs.row_vars == {"x", "y"}
+    assert not cs.measure_atoms and len(cs.row_atoms) == 2
+    xs = np.array([1, 2, 2, 4, 8], dtype=np.int64)
+    ys = np.array([1, 2, 8, 4, 8], dtype=np.int64)
+    mask = cs.feasible_rows({"x": xs, "y": ys}, {"x": 8, "y": 8}, 5)
+    #                x>1 fails ^      16 ok  64 ok  64 ok  256>64
+    assert mask.tolist() == [False, True, True, True, False]
+
+
+def test_measure_interval_matches_reference_randomized():
+    """Vectorized interval emptiness == per-row exact check, fuzzed."""
+    rng = random.Random(7)
+    n = 24
+    cols = {"x": np.array([rng.randrange(0, 7) for _ in range(n)],
+                          dtype=np.int64),
+            "y": np.array([rng.randrange(0, 7) for _ in range(n)],
+                          dtype=np.int64)}
+    maxvals = {"x": 6, "y": 6}
+    for trial in range(60):
+        atoms = [Constraint.ge(V("P_m")), Constraint.le(V("P_m"), 1)]
+        for _ in range(rng.randrange(1, 4)):
+            k = (rng.randrange(-3, 4) * V("x") + rng.randrange(-2, 3))
+            c = (rng.randrange(-3, 4) * V("y") + rng.randrange(-6, 7))
+            rel = rng.choice([Constraint.ge, Constraint.gt, Constraint.eq])
+            atoms.append(rel(k * V("P_m") + c))
+        _mask_vs_reference(ConstraintSystem(atoms), cols, maxvals, n)
+
+
+def test_specialize_decides_fully_bound_systems():
+    C = ConstraintSystem([
+        Constraint.ge(V("P_occ") * V("M") - V("c")),   # P_occ >= c/M
+        Constraint.le(V("P_occ"), 1),
+        Constraint.ge(V("P_occ")),
+    ])
+    feas = specialize_system(C, {"M": 8, "c": 4})      # P_occ in [1/2, 1]
+    assert feas.decided and not feas.infeasible
+    infeas = specialize_system(C, {"M": 8, "c": 9})    # P_occ >= 9/8 > 1
+    assert infeas.decided and infeas.infeasible
+    assert C.subs({"M": 8, "c": 9}).check() is Verdict.INCONSISTENT
+
+
+def test_specialize_cache_returns_same_object():
+    C = ConstraintSystem([Constraint.ge(V("x") - 1)])
+    assert specialize_system(C, {"x": 3}) is specialize_system(C, {"x": 3})
+    assert specialize_system(C, {"x": 3}) is not specialize_system(C, {"x": 1})
+
+
+def test_unclassifiable_atoms_set_fallback():
+    quad = ConstraintSystem([Constraint.ge(V("P_a") * V("P_a") - 1)])
+    assert specialize_system(quad, {}).fallback
+    two = ConstraintSystem([Constraint.ge(V("P_a") * V("P_b") - 1)])
+    assert specialize_system(two, {}).fallback
+
+
+def test_uncertified_rows_fall_back_to_exact():
+    big = 1 << 60
+    C = ConstraintSystem([Constraint.ge(Poly.const(big) * V("x") - 5 * big)])
+    cs = specialize_system(C, {})
+    xs = np.array([1, 5, 7], dtype=np.int64)
+    mask = cs.feasible_rows({"x": xs}, {"x": 7}, 3)
+    assert mask.tolist() == [False, True, True]
+
+
+def test_integer_bounds_prefilter():
+    C = ConstraintSystem([Constraint.gt(V("x"), 2), Constraint.le(V("y"), 6)])
+    cs = specialize_system(C, {})
+    assert cs.int_bounds["x"] == (3, None)
+    assert cs.int_bounds["y"] == (None, 6)
+    assert cs.filter_domain("x", (1, 2, 3, 4)) == (3, 4)
+    assert cs.filter_domain("y", (4, 6, 8)) == (4, 6)
+    assert cs.filter_domain("z", (1, 2)) == (1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Strict-bound tightening (integer domains) + strictness on rationals
+# ---------------------------------------------------------------------------
+
+def test_integer_var_convention():
+    assert is_integer_var("bm") and is_integer_var("V")
+    assert not is_integer_var("P_occ")
+
+
+def test_strict_integer_gap_is_inconsistent():
+    # 5 < a < 6 has no integer solution; the old epsilon hack kept it alive
+    s = ConstraintSystem([Constraint.gt(V("a"), 5), Constraint.lt(V("a"), 6)])
+    assert s.check() is Verdict.INCONSISTENT
+
+
+def test_strict_integer_bound_is_exact_not_epsilon():
+    # a > 5/2  must tighten to a >= 3 — and a = 3 must stay reachable
+    s = ConstraintSystem([Constraint.gt(2 * V("a"), 5),
+                          Constraint.le(V("a"), 3)])
+    assert s.check() is Verdict.CONSISTENT
+    w = s.witness()
+    assert w is not None and w["a"] == 3
+
+
+def test_strict_rational_measure_is_tracked_exactly():
+    half = Fraction(1, 2)
+    meet = ConstraintSystem([Constraint.gt(V("P_x"), half),
+                             Constraint.lt(V("P_x"), half)])
+    assert meet.check() is Verdict.INCONSISTENT
+    closed = ConstraintSystem([Constraint.ge(V("P_x"), half),
+                               Constraint.le(V("P_x"), half)])
+    assert closed.check() is Verdict.CONSISTENT
+    # a sub-epsilon open window must NOT be pruned (the old hack did)
+    tiny = ConstraintSystem([Constraint.gt(V("P_x"), 0),
+                             Constraint.lt(V("P_x"), Fraction(1, 10**12))])
+    assert tiny.check() is not Verdict.INCONSISTENT
+
+
+# ---------------------------------------------------------------------------
+# Witness sampling: log-uniform without endpoint pile-up
+# ---------------------------------------------------------------------------
+
+def test_log_uniform_stays_in_box():
+    rng = random.Random(0)
+    lo, hi = 3, 1000
+    vals = [_log_uniform_int(rng, lo, hi) for _ in range(2000)]
+    assert all(lo <= v <= hi for v in vals)
+    # clamping used to put ~half the mass on hi; rejection must not
+    assert sum(v == hi for v in vals) / len(vals) < 0.05
+    assert _log_uniform_int(rng, 5, 5) == 5
+    assert _log_uniform_int(rng, 9, 2) == 9          # degenerate box
+
+
+def test_witness_still_finds_small_products():
+    s = ConstraintSystem([
+        Constraint.ge(V("x"), 3),
+        Constraint.le(V("x") * V("y"), 40),
+        Constraint.ge(V("y"), 2),
+    ])
+    w = s.witness()
+    assert w is not None and s.holds(w)
