@@ -165,6 +165,37 @@ def bench_compile_sweep(quick=False):
              f"rows={report['rows_screened']}")]
 
 
+def bench_tuning_sweep(quick=False):
+    """The measure -> calibrate -> compact loop (scripts/tune_artifacts.py)
+    end to end for one matmul bucket on interpreted Pallas — the cost of
+    closing the offline-ranking loop against the machine, and the CI gate
+    that keeps the tuning pipeline runnable."""
+    from repro.artifacts import ArtifactStore, compile_family
+    from repro.tuning import MeasureConfig, calibrate_table, compact_table, \
+        measure_table
+    n = 128 if quick else 256
+    shape = {"M": n, "N": n, "K": n}
+    cfg = MeasureConfig(iters=2, warmup=1, trim=0, max_dim=n,
+                        top_k=2 if quick else 4)
+    with tempfile.TemporaryDirectory() as tmp:
+        store = ArtifactStore(tmp)
+        compile_family(MATMUL, store, machines=[TPU_V5E], shapes=[shape])
+        table = store.load_dispatch(MATMUL.name, TPU_V5E.name)
+        t0 = time.perf_counter()
+        samples = measure_table(MATMUL, table, cfg)
+        tuned = compact_table(calibrate_table(MATMUL, table, samples),
+                              samples)
+        store.save_dispatch(tuned)
+        us = (time.perf_counter() - t0) * 1e6
+    ok = sum(s.us is not None for s in samples)
+    comp = tuned["compaction"]
+    return [("tuning_sweep_matmul", us,
+             f"measured={ok}/{len(samples)} "
+             f"variants={comp['total_variants_measured']}->"
+             f"{len(comp['variants'])} "
+             f"covered={comp['buckets_covered']}/{comp['buckets_total']}")]
+
+
 def bench_tree_build():
     """Offline cost of comprehensive optimization itself (paper §6 claims
     the computer-algebra part is not a bottleneck)."""
@@ -212,6 +243,7 @@ BENCH_GROUPS = (
     ("dispatch", bench_dispatch_cache),
     ("dispatch_reference", bench_dispatch_reference),
     ("compile", bench_compile_sweep),
+    ("tuning", bench_tuning_sweep),
     ("treebuild", lambda quick: bench_tree_build()),
     ("lm", bench_lm_step),
 )

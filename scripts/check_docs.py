@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Markdown link check over docs/ + README — CI's dead-doc gate.
+
+Scans every tracked markdown file for inline links/images
+(``[text](target)``) and reference definitions (``[ref]: target``), and
+fails when an *intra-repo* target does not exist on disk.  External URLs
+(``http://``, ``https://``, ``mailto:``) are not fetched — this gate is
+about the repo's own docs never pointing at files a refactor moved or
+deleted.  Anchors (``path#section``) are checked for the file part only.
+
+    python scripts/check_docs.py              # docs/ + README.md + ROADMAP.md
+    python scripts/check_docs.py FILE.md ...  # explicit file list
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) — but not [text](http://...); and footnote-style
+# [ref]: target definitions at line start
+_INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+DEFAULT_FILES = ("README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md")
+
+
+def iter_targets(text: str):
+    for m in _INLINE.finditer(text):
+        yield m.group(1)
+    for m in _REFDEF.finditer(text):
+        yield m.group(1)
+
+
+def check_file(md: Path) -> list:
+    failures = []
+    text = md.read_text(encoding="utf-8")
+    for target in iter_targets(text):
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        path_part = target.split("#", 1)[0]
+        if not path_part:
+            continue
+        # leading "/" means repo-root-relative (GitHub convention), not
+        # filesystem-absolute
+        resolved = (ROOT / path_part.lstrip("/") if path_part.startswith("/")
+                    else md.parent / path_part)
+        try:
+            resolved = resolved.resolve()
+        except OSError:
+            failures.append((md, target, "unresolvable"))
+            continue
+        if not resolved.exists():
+            failures.append((md, target, "missing"))
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("files", nargs="*",
+                    help="markdown files to check (default: docs/**/*.md "
+                         "plus README.md, ROADMAP.md, CHANGES.md, PAPER.md)")
+    args = ap.parse_args(argv)
+
+    if args.files:
+        files = [Path(f).resolve() for f in args.files]
+    else:
+        files = sorted((ROOT / "docs").glob("**/*.md"))
+        files += [ROOT / name for name in DEFAULT_FILES
+                  if (ROOT / name).exists()]
+    missing_inputs = [f for f in files if not f.exists()]
+    if missing_inputs:
+        for f in missing_inputs:
+            print(f"[DOCS FAIL] input file missing: {f}", file=sys.stderr)
+        return 1
+
+    failures = []
+    checked = 0
+    for md in files:
+        failures.extend(check_file(md))
+        checked += 1
+    for md, target, why in failures:
+        try:
+            shown = md.relative_to(ROOT)
+        except ValueError:
+            shown = md
+        print(f"[DOCS FAIL] {shown}: link -> {target!r} "
+              f"({why})", file=sys.stderr)
+    print(f"checked {checked} markdown files, "
+          f"{len(failures)} dead intra-repo links")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,10 +16,26 @@ through three tiers:
      loaded from the tree artifact when present, rebuilt in-process when
      not).
 
-Soundness note: tier 2 never *invents* feasibility — every candidate it
-returns passes the same leaf-constraint check the cold path applies; if the
-whole precompiled shortlist fails for the exact data, we fall through to
-tier 3.
+Within tier 2, a FORMAT_VERSION-2 table may carry a ``measured_ranks``
+section written by ``scripts/tune_artifacts.py`` (see :mod:`repro.tuning`):
+per bucket, the candidate order observed on real hardware.  When present
+and well-formed it *reorders* the shortlist walk — measured rank beats the
+symbolic score — but it can never add candidates; feasibility still comes
+from the leaf constraints alone.
+
+Invariants this module maintains (tests enforce them):
+
+- **cache-miss-never-error** — a missing, unreadable, version-mismatched,
+  or field-mangled table (including a malformed ``measured_ranks`` or
+  ``calibration`` section) degrades to the next tier; no artifact content
+  can raise out of ``best_variant``;
+- **soundness** — tier 2 never invents feasibility: every candidate it
+  returns passes the same leaf-constraint check the cold path applies; if
+  the whole precompiled shortlist fails for the exact data, we fall through
+  to tier 3;
+- **parity without tuning** — a table with no ``measured_ranks`` section
+  resolves exactly as the symbolic cold path would (asserted by the
+  artifact/tuning test suites).
 """
 from __future__ import annotations
 
@@ -52,13 +68,16 @@ class DispatchStats:
     memory_hits: int = 0
     disk_hits: int = 0
     cold_builds: int = 0
+    measured_hits: int = 0        # disk hits served in measured (tuned) order
 
     def reset(self) -> None:
         self.memory_hits = self.disk_hits = self.cold_builds = 0
+        self.measured_hits = 0
 
     def as_dict(self) -> Dict[str, int]:
         return {"memory_hits": self.memory_hits, "disk_hits": self.disk_hits,
-                "cold_builds": self.cold_builds}
+                "cold_builds": self.cold_builds,
+                "measured_hits": self.measured_hits}
 
 
 class DispatchCache:
@@ -73,7 +92,10 @@ class DispatchCache:
         self.store = store
         self.maxsize = maxsize
         self.stats = DispatchStats()
-        self._lru: "OrderedDict[DispatchKey, Candidate]" = OrderedDict()
+        # key -> (candidate, source) where source records which ranking
+        # decided the original resolution: "measured" | "symbolic" | "cold"
+        self._lru: "OrderedDict[DispatchKey, Tuple[Candidate, str]]" = \
+            OrderedDict()
         # (family, machine) -> (raw payload, leaves parsed once) or None
         self._tables: Dict[Tuple[str, str],
                            Optional[Tuple[Dict[str, Any],
@@ -84,6 +106,17 @@ class DispatchCache:
     # -- public API ----------------------------------------------------------
     def best_variant(self, family: FamilySpec, machine: MachineDescription,
                      data: Mapping[str, int]) -> Candidate:
+        return self.best_variant_with_source(family, machine, data)[0]
+
+    def best_variant_with_source(self, family: FamilySpec,
+                                 machine: MachineDescription,
+                                 data: Mapping[str, int]
+                                 ) -> Tuple[Candidate, str]:
+        """Resolve, also reporting which ranking decided the candidate:
+        ``"measured"`` (tuned table order), ``"symbolic"`` (precompiled
+        offline ranking), or ``"cold"`` (tier-3 rebuild).  A memory hit
+        returns the source recorded when the triple was first resolved, so
+        attribution is race-free under concurrent callers."""
         key: DispatchKey = (family.name, machine.name,
                             tuple(sorted((k, int(v)) for k, v in data.items())))
         with self._lock:
@@ -93,22 +126,26 @@ class DispatchCache:
                 self.stats.memory_hits += 1
                 return hit
 
-        cand = self._from_disk(family, machine, data)
-        if cand is None:
+        hit2 = self._from_disk(family, machine, data)
+        if hit2 is None:
             cold = rank_candidates(family, machine, data,
                                    leaves=self._tree(family))[0]
 
         with self._lock:
-            if cand is not None:
+            if hit2 is not None:
+                cand, measured = hit2
+                source = "measured" if measured else "symbolic"
                 self.stats.disk_hits += 1
+                if measured:
+                    self.stats.measured_hits += 1
             else:
                 self.stats.cold_builds += 1
-                cand = cold
-            self._lru[key] = cand
+                cand, source = cold, "cold"
+            self._lru[key] = (cand, source)
             self._lru.move_to_end(key)
             while len(self._lru) > self.maxsize:
                 self._lru.popitem(last=False)
-        return cand
+        return cand, source
 
     def clear(self) -> None:
         with self._lock:
@@ -134,11 +171,7 @@ class DispatchCache:
         payload = self.store.load_dispatch(family_name, machine_name)
         if payload is not None:
             try:
-                # leaves are keyed by index in the *full* tree
-                # (see compile.build_dispatch_table)
-                leaves = {int(i): serde.obj_to_leaf(obj)
-                          for i, obj in payload["leaves"].items()}
-                parsed = (payload, leaves)
+                parsed = (payload, serde.table_leaves(payload))
             except (serde.ArtifactFormatError, AttributeError, KeyError,
                     TypeError, ValueError):
                 parsed = None
@@ -146,20 +179,71 @@ class DispatchCache:
             self._tables[tkey] = parsed
         return parsed
 
-    def _from_disk(self, family: FamilySpec, machine: MachineDescription,
-                   data: Mapping[str, int]) -> Optional[Candidate]:
+    @staticmethod
+    def _measured_order(table: Dict[str, Any], bucket: str,
+                        n_entries: int) -> Optional[List[int]]:
+        """Entry order from a tuned table's ``measured_ranks`` section.
+
+        Returns ``None`` (symbolic order) unless the section exists and the
+        bucket's ``order`` is a list of unique in-range ints — any malformed
+        content degrades to the symbolic ranking, never an error."""
+        section = table.get("measured_ranks")
+        if not isinstance(section, dict):
+            return None
+        rec = section.get(bucket)
+        if not isinstance(rec, dict):
+            return None
+        order = rec.get("order")
+        if not isinstance(order, list) or not order:
+            return None
+        try:
+            idx = [int(i) for i in order]
+        except (TypeError, ValueError):
+            return None
+        if len(set(idx)) != len(idx) or \
+                any(i < 0 or i >= n_entries for i in idx):
+            return None
+        # entries the tuner never saw keep their symbolic rank at the tail
+        seen = set(idx)
+        return idx + [i for i in range(n_entries) if i not in seen]
+
+    def _bucket_entries(self, family: FamilySpec,
+                        machine: MachineDescription, data: Mapping[str, int]
+                        ) -> Optional[Tuple[Dict[str, Any], Dict[int, Leaf],
+                                            str, List[Any]]]:
+        """Shared tier-2 prologue: load the table, reject stale machine
+        bindings, find the data's bucket.  Both the resolution path
+        (:meth:`_from_disk`) and the observability path
+        (:meth:`rank_source`) go through here so they cannot drift."""
         loaded = self._table(family.name, machine.name)
         if loaded is None:
             return None
         table, leaves = loaded
         if table.get("machine_bindings") != machine.bindings():
             return None                       # stale table for a renamed host
-        entries = table.get("buckets", {}).get(bucket_key(data))
+        bucket = bucket_key(data)
+        entries = table.get("buckets", {}).get(bucket)
         if not entries:
             return None
+        return table, leaves, bucket, entries
+
+    def _from_disk(self, family: FamilySpec, machine: MachineDescription,
+                   data: Mapping[str, int]
+                   ) -> Optional[Tuple[Candidate, bool]]:
+        """Resolve via the precompiled table; ``(candidate, measured)`` or
+        ``None``.  ``measured`` flags that a tuned (measured-rank) order
+        decided the walk — :class:`DispatchStats` reports it."""
+        loaded = self._bucket_entries(family, machine, data)
+        if loaded is None:
+            return None
+        table, leaves, bucket, entries = loaded
+        order = self._measured_order(table, bucket, len(entries))
+        measured = order is not None
+        if order is not None:
+            entries = [entries[i] for i in order]
         binding = {**machine.bindings(),
                    **{k: int(v) for k, v in data.items()}}
-        for entry in entries:                 # pre-ranked, best first
+        for entry in entries:                 # best first (measured/symbolic)
             try:
                 idx = int(entry["leaf_index"])
                 asg = {k: int(v) for k, v in entry["assignment"].items()}
@@ -181,8 +265,25 @@ class DispatchCache:
             if infeasible:
                 continue                      # infeasible for the exact shape
             return Candidate(leaf_index=idx, plan=leaf.plan,
-                             assignment=asg, score=score)
+                             assignment=asg, score=score), measured
         return None
+
+    def rank_source(self, family: FamilySpec, machine: MachineDescription,
+                    data: Mapping[str, int]) -> str:
+        """Which ranking would decide this triple at tier 2.
+
+        ``"measured"`` — the loaded table carries a usable measured order
+        for the data's bucket; ``"symbolic"`` — a table bucket exists but
+        has no (valid) measurement; ``"cold"`` — no table/bucket, tier 3
+        would enumerate.  Purely observational (used by serving warm-up
+        reports); does not touch the LRU or stats."""
+        loaded = self._bucket_entries(family, machine, data)
+        if loaded is None:
+            return "cold"
+        table, _, bucket, entries = loaded
+        if self._measured_order(table, bucket, len(entries)) is not None:
+            return "measured"
+        return "symbolic"
 
     # -- tier 3 support: disk tree beats in-process rebuild ------------------
     def _tree(self, family: FamilySpec) -> Optional[Sequence[Leaf]]:

@@ -19,6 +19,14 @@ re-compile of an unchanged family is a no-op diff.
 Format versioning policy (recorded in ROADMAP.md): every artifact embeds
 ``FORMAT_VERSION``; readers treat any mismatch as a cache miss (rebuild),
 never an error.  Bump the version on *any* schema or semantic change.
+
+Version history:
+  1 — trees + dispatch tables with symbolic pre-ranked buckets (PR 1).
+  2 — dispatch tables may carry optional measurement-calibration sections
+      (``calibration``, ``measured_ranks``, ``compaction`` — written by
+      ``scripts/tune_artifacts.py``, consumed by
+      :mod:`repro.artifacts.dispatch`).  v1 artifacts are never migrated:
+      per the policy above they read as a cache miss and are recompiled.
 """
 from __future__ import annotations
 
@@ -31,7 +39,7 @@ from ..core.constraints import Constraint, ConstraintSystem, Rel
 from ..core.plan import KernelPlan, Leaf, ParamDomain
 from ..core.polynomial import Poly
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
 
 
 class ArtifactFormatError(ValueError):
@@ -146,6 +154,13 @@ def obj_to_tree(obj: Mapping[str, Any]) -> List[Leaf]:
     if obj.get("kind") != "tree":
         raise ArtifactFormatError(f"not a tree artifact: {obj.get('kind')!r}")
     return [obj_to_leaf(l) for l in obj["leaves"]]
+
+
+def table_leaves(table: Mapping[str, Any]) -> Dict[int, Leaf]:
+    """Parse a dispatch table's ``leaves`` section (keyed by index in the
+    *full* tree — see ``compile.build_dispatch_table``)."""
+    return {int(i): obj_to_leaf(obj)
+            for i, obj in table.get("leaves", {}).items()}
 
 
 def dumps(obj: Any) -> str:

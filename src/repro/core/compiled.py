@@ -29,6 +29,22 @@ Variable-domain convention (paper hypothesis H1): names starting with
 ``P_`` are performance measures — rationals in ``[0, 1]``; every other
 variable ranges over the non-negative integers.  See
 :func:`repro.core.constraints.is_integer_var`.
+
+Invariants (docs/architecture.md restates these; tests enforce them):
+
+- **float64-exactness certificate** — the vectorized evaluators only trust
+  a float64 result when the precomputed magnitude bound proves every
+  intermediate stays below 2**53; anything the certificate cannot cover
+  runs the exact ``Fraction`` fallback.  Speed never changes an answer.
+- **screen parity** — ``CompiledSystem.feasible_rows`` replicates exactly
+  the INCONSISTENT proofs of :meth:`ConstraintSystem.check` (constant
+  refutation + interval-box emptiness), nothing more; the per-candidate
+  reference loop remains the parity oracle
+  (``use_compiled=False`` / ``REPRO_COMPILED=0``,
+  tests/test_select_parity.py).
+- **no semantic drift without a version bump** — any change that alters a
+  canonical tree's bytes (e.g. a new bound-tightening rule) must bump
+  ``repro.artifacts.serde.FORMAT_VERSION`` (ROADMAP policy).
 """
 from __future__ import annotations
 

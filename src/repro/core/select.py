@@ -23,6 +23,10 @@ property tests assert both paths select identical candidates.
 
 This file is what the rest of the framework calls: every perf-critical op
 asks ``best_variant(family, machine, data)`` for its kernel configuration.
+Ranking preference order: a *measured* (hardware-calibrated) rank from a
+tuned dispatch table when one covers the bucket (``scripts/
+tune_artifacts.py``, :mod:`repro.tuning`), else the symbolic offline model —
+the fallback chain lives in :class:`repro.artifacts.dispatch.DispatchCache`.
 """
 from __future__ import annotations
 
@@ -325,7 +329,10 @@ def best_variant(family: FamilySpec,
     The fully-static path (no ``runner``) is served by the process-wide
     :class:`repro.artifacts.dispatch.DispatchCache` — memory LRU, then disk
     artifact, then cold rebuild — so a recurring (family, machine, data)
-    triple costs a dict lookup, not a tree search.  ``use_cache=False`` forces
+    triple costs a dict lookup, not a tree search.  A disk table tuned by
+    ``scripts/tune_artifacts.py`` carries measured per-bucket ranks; those
+    take precedence over the symbolic score, falling back to the symbolic
+    order for untuned tables/buckets.  ``use_cache=False`` forces
     the cold path (the cache itself uses it, as do A/B tests).
 
     ``runner`` (optional) measures wall-clock seconds for a candidate; when

@@ -38,8 +38,9 @@ def main() -> None:
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len, warm_kernels=args.warm_kernels)
     if eng.kernel_plan:
-        for name, cand in eng.kernel_plan.items():
-            print(f"kernel {name}: {cand.describe()}")
+        for name, info in eng.kernel_plan.items():
+            print(f"kernel {name} [{info['rank_source']}]: "
+                  f"{info['candidate'].describe()}")
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()

@@ -39,19 +39,38 @@ def warm_kernel_dispatch(cfg: ModelConfig, *,
     of times; resolving them once at engine start — ideally from the disk
     artifacts compiled by ``scripts/compile_artifacts.py`` — keeps every
     later ``select`` call an LRU hit, so no request ever pays for tree
-    enumeration.  Returns {description: Candidate} for observability.
+    enumeration.
+
+    Returns ``{description: {"candidate": Candidate, "rank_source": str}}``
+    where ``rank_source`` reports whether the pick was decided by a
+    *measured* (tuned — see ``scripts/tune_artifacts.py``) ranking, the
+    *symbolic* precompiled ranking, or a *cold* rebuild: the
+    calibrated-vs-symbolic observability hook for serving start-up logs.
+    Attribution comes from the resolution itself
+    (:meth:`DispatchCache.best_variant_with_source`): the source is recorded
+    alongside the candidate when a triple is first resolved, so a tuned
+    bucket whose shortlist fails exact-shape revalidation correctly reports
+    ``cold``, memory hits report the tier that originally decided them, and
+    concurrent dispatches on the shared cache cannot skew the label.
     """
-    from ..kernels.ops import select
+    from ..artifacts.dispatch import get_default_cache
+    from ..kernels.ops import FAMILIES
+    cache = get_default_cache()
     picks: Dict[str, Any] = {}
+
+    def pick(label: str, family_name: str, data: Dict[str, int]) -> None:
+        cand, source = cache.best_variant_with_source(
+            FAMILIES[family_name], machine, data)
+        picks[label] = {"candidate": cand, "rank_source": source}
+
     d, hd = cfg.d_model, cfg.hd
     for sq in {max_len, 2 * max_len}:
-        picks[f"flash_attention@SQ{sq}"] = select(
-            "flash_attention", {"SQ": sq, "HD": hd}, machine)
+        pick(f"flash_attention@SQ{sq}", "flash_attention",
+             {"SQ": sq, "HD": hd})
     for m, n, k in ((max_len, cfg.d_ff or 4 * d, d),     # MLP up-projection
                     (max_len, d, cfg.d_ff or 4 * d),     # MLP down-projection
                     (max_len, cfg.heads * hd, d)):       # QKV projection
-        picks[f"matmul@{m}x{n}x{k}"] = select(
-            "matmul", {"M": m, "N": n, "K": k}, machine)
+        pick(f"matmul@{m}x{n}x{k}", "matmul", {"M": m, "N": n, "K": k})
     return picks
 
 

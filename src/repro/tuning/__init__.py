@@ -1,0 +1,46 @@
+"""Measurement-calibrated dispatch (closing the offline loop on hardware).
+
+The case discussion ranks kernel variants with a purely *symbolic*
+performance model (paper §4); nothing in the offline pipeline ever checks
+that ranking against the machine it claims to describe.  This package adds
+the missing feedback edge, following KLARAPTOR (arXiv:1911.02373 — fit the
+rational performance model to measured timings per device) and "A Few Fit
+Most" (arXiv:2507.15277 — a handful of calibrated variants covers most
+shapes):
+
+- :mod:`repro.tuning.measure`   — time the top-k pre-ranked candidates of a
+  dispatch table per ``(family, machine, bucket)`` on real or interpreted
+  Pallas (deterministic seeds, trimmed mean over repeats);
+- :mod:`repro.tuning.calibrate` — least-squares fit of per-family scale
+  coefficients for the symbolic performance-measure rationals, then re-rank
+  every bucket by measured (or model-predicted) time;
+- :mod:`repro.tuning.compact`   — greedy "few fit most" reduction: the
+  smallest variant subset whose measured time stays within a tolerance of
+  each bucket's best.
+
+``scripts/tune_artifacts.py`` drives measure → calibrate → compact and
+rewrites the dispatch table in place (``FORMAT_VERSION`` 2: the sections are
+*optional*, and per the artifact policy a v1 reader treats the new table as
+a cache miss, never an error).  :mod:`repro.artifacts.dispatch` prefers the
+measured order when a bucket carries one and falls back to the symbolic
+ranking otherwise — serving behaviour is unchanged for untuned tables.
+
+Invariants (shared with :mod:`repro.artifacts.serde`):
+
+- tuned tables remain canonical-bytes deterministic: re-serializing a
+  reloaded tuned table reproduces it byte for byte;
+- measurement can only *reorder* a bucket's candidate list, never add to
+  it — feasibility always comes from the constraint tree, so a tuned table
+  is exactly as sound as the symbolic one;
+- every reader of the new sections degrades to the symbolic ranking on any
+  malformed content (cache-miss-never-error).
+"""
+from .calibrate import CalibrationFit, calibrate_table, fit_family
+from .compact import compact_table
+from .measure import MeasureConfig, MeasuredSample, measure_table, \
+    parse_bucket_key
+
+__all__ = [
+    "CalibrationFit", "MeasureConfig", "MeasuredSample", "calibrate_table",
+    "compact_table", "fit_family", "measure_table", "parse_bucket_key",
+]

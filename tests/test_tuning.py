@@ -1,0 +1,300 @@
+"""Measurement-calibrated dispatch tables (repro.tuning + FORMAT_VERSION 2).
+
+Covers the PR acceptance criteria: a tuned (v2) table round-trips
+byte-deterministically, a v1 table reads as a cache miss (never an error),
+``best_variant`` prefers the measured rank and stays in exact parity with
+the symbolic path when no calibration is present, and the few-fit-most
+compaction finds a reduced variant set within tolerance.
+
+Measurements are injected through ``measure_table``'s ``timer`` hook — a
+deterministic fake keyed on the assignment — so these tests exercise the
+full measure -> calibrate -> compact -> dispatch loop without paying for
+interpreted Pallas.
+"""
+import pytest
+
+from repro.artifacts import (ArtifactStore, DispatchCache, bucket_key,
+                             compile_family, serde)
+from repro.artifacts.dispatch import set_default_cache
+from repro.core import TPU_V5E, best_variant
+from repro.core.select import STATS
+from repro.kernels.matmul import FAMILY as MATMUL
+from repro.tuning import (MeasureConfig, calibrate_table, compact_table,
+                          fit_family, measure_table, parse_bucket_key)
+from repro.tuning.calibrate import predict_us
+from repro.tuning.measure import clamp_data, trimmed_mean_us
+
+MM_256 = {"M": 256, "N": 256, "K": 256}
+MM_512 = {"M": 512, "N": 512, "K": 512}
+CFG = MeasureConfig(iters=3, warmup=0, trim=1, max_dim=512, top_k=4)
+
+
+@pytest.fixture(autouse=True)
+def _isolate_default_cache():
+    set_default_cache(DispatchCache())
+    yield
+    set_default_cache(None)
+
+
+def fake_timer(family, plan, assignment, data, cfg):
+    """Deterministic stand-in for kernel wall time: cheaper for small ``s``,
+    which *inverts* the symbolic preference (the symbolic model ranks large
+    ``s`` variants first at these shapes) — so a measured-rank win is
+    observable."""
+    us = 100.0 * assignment["s"] + 0.01 * assignment["bk"]
+    return [us * 1e-6] * cfg.iters
+
+
+def _tuned_store(tmp_path, shapes, tolerance=0.10, timer=fake_timer):
+    store = ArtifactStore(tmp_path)
+    compile_family(MATMUL, store, machines=[TPU_V5E], shapes=shapes)
+    table = store.load_dispatch(MATMUL.name, TPU_V5E.name)
+    samples = measure_table(MATMUL, table, CFG, timer=timer)
+    tuned = calibrate_table(MATMUL, table, samples, meta={"fake": True})
+    tuned = compact_table(tuned, samples, tolerance=tolerance)
+    store.save_dispatch(tuned)
+    return store, tuned, samples
+
+
+# ---------------------------------------------------------------------------
+# measure helpers
+# ---------------------------------------------------------------------------
+
+def test_parse_bucket_key_inverts_bucket_key():
+    assert parse_bucket_key(bucket_key(MM_512)) == MM_512
+    assert parse_bucket_key(bucket_key({"SQ": 4096, "HD": 64})) == \
+        {"SQ": 4096, "HD": 64}
+    with pytest.raises(ValueError):
+        parse_bucket_key("nodigits")
+
+
+def test_clamp_and_trimmed_mean():
+    assert clamp_data({"M": 4096, "N": 128}, 256) == {"M": 256, "N": 128}
+    # trim=1 drops the 1.0 outlier and the 0.1 minimum
+    assert trimmed_mean_us([0.3, 1.0, 0.1, 0.3, 0.3], trim=1) == \
+        pytest.approx(0.3e6)
+
+
+def test_measure_failure_is_data_not_error(tmp_path):
+    store = ArtifactStore(tmp_path)
+    compile_family(MATMUL, store, machines=[TPU_V5E], shapes=[MM_512])
+    table = store.load_dispatch(MATMUL.name, TPU_V5E.name)
+
+    def exploding(family, plan, assignment, data, cfg):
+        raise RuntimeError("kernel blew up")
+
+    samples = measure_table(MATMUL, table, CFG, timer=exploding)
+    assert samples and all(s.us is None for s in samples)
+    tuned = compact_table(calibrate_table(MATMUL, table, samples), samples)
+    # the all-failed bucket is reported as uncovered, not silently dropped
+    comp = tuned["compaction"]
+    assert comp["buckets_total"] == 1 and comp["buckets_covered"] == 0
+    assert comp["per_bucket"] == {bucket_key(MM_512): None}
+    # a bucket with zero successful measurements must NOT get an order —
+    # otherwise dispatch would report "measured" for the symbolic ranking
+    assert tuned["measured_ranks"] == {}
+    store.save_dispatch(tuned)                          # still a valid table
+    cache = DispatchCache(store=store)
+    assert cache.rank_source(MATMUL, TPU_V5E, MM_512) == "symbolic"
+    cand = cache.best_variant(MATMUL, TPU_V5E, MM_512)  # must not raise
+    assert cache.stats.measured_hits == 0
+    assert cand == best_variant(MATMUL, TPU_V5E, MM_512, use_cache=False)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: measured rank consumed by best_variant
+# ---------------------------------------------------------------------------
+
+def test_best_variant_prefers_measured_rank(tmp_path):
+    store, tuned, samples = _tuned_store(tmp_path, [MM_512])
+    bucket = bucket_key(MM_512)
+    # the fake timer must actually disagree with the symbolic order,
+    # otherwise this test proves nothing
+    order = tuned["measured_ranks"][bucket]["order"]
+    assert order[0] != 0
+    cache = DispatchCache(store=store)
+    STATS.reset()
+    cand = cache.best_variant(MATMUL, TPU_V5E, MM_512)
+    assert STATS.enumerate_calls == 0                 # disk tier, no search
+    assert cache.stats.disk_hits == 1
+    assert cache.stats.measured_hits == 1
+    fastest = min((s for s in samples if s.us is not None),
+                  key=lambda s: s.us)
+    assert cand.assignment == fastest.assignment
+    symbolic = best_variant(MATMUL, TPU_V5E, MM_512, use_cache=False)
+    assert cand.assignment != symbolic.assignment     # the rank really moved
+
+
+def test_rank_source_reporting(tmp_path):
+    store, _, _ = _tuned_store(tmp_path, [MM_512])
+    cache = DispatchCache(store=store)
+    assert cache.rank_source(MATMUL, TPU_V5E, MM_512) == "measured"
+    assert cache.rank_source(MATMUL, TPU_V5E,
+                             {"M": 64, "N": 64, "K": 64}) == "cold"
+    assert DispatchCache().rank_source(MATMUL, TPU_V5E, MM_512) == "cold"
+
+
+def test_parity_with_symbolic_when_untuned(tmp_path):
+    """No calibration section => byte-identical behaviour to PR-1 dispatch."""
+    store = ArtifactStore(tmp_path)
+    compile_family(MATMUL, store, machines=[TPU_V5E], shapes=[MM_512])
+    cache = DispatchCache(store=store)
+    assert cache.rank_source(MATMUL, TPU_V5E, MM_512) == "symbolic"
+    cand = cache.best_variant(MATMUL, TPU_V5E, MM_512)
+    assert cache.stats.measured_hits == 0
+    assert cand == best_variant(MATMUL, TPU_V5E, MM_512, use_cache=False)
+
+
+def test_mangled_measured_ranks_degrade_to_symbolic(tmp_path):
+    """Malformed tuning sections are ignored, never raised (cache-miss-
+    never-error, applied to the v2 sections)."""
+    store, tuned, _ = _tuned_store(tmp_path, [MM_512])
+    bucket = bucket_key(MM_512)
+    for bad_order in ([99, 98], ["x"], "notalist", [0, 0, 1]):
+        mangled = dict(tuned)
+        mangled["measured_ranks"] = {bucket: {"order": bad_order}}
+        store.save_dispatch(mangled)
+        cache = DispatchCache(store=store)
+        cand = cache.best_variant(MATMUL, TPU_V5E, MM_512)   # must not raise
+        assert cache.stats.disk_hits == 1
+        assert cache.stats.measured_hits == 0
+        assert cand == best_variant(MATMUL, TPU_V5E, MM_512, use_cache=False)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: v2 round-trip + v1 cache miss
+# ---------------------------------------------------------------------------
+
+def test_tuned_table_roundtrips_byte_deterministically(tmp_path):
+    store, tuned, _ = _tuned_store(tmp_path, [MM_256, MM_512])
+    assert tuned["format"] == serde.FORMAT_VERSION == 2
+    reloaded = store.load_dispatch(MATMUL.name, TPU_V5E.name)
+    assert serde.dumps(reloaded) == serde.dumps(tuned)
+    # and a save -> load -> save cycle is a fixed point (no float drift)
+    store.save_dispatch(reloaded)
+    again = store.load_dispatch(MATMUL.name, TPU_V5E.name)
+    assert serde.dumps(again) == serde.dumps(tuned)
+    assert "calibration" in again and "measured_ranks" in again
+
+
+def test_v1_table_is_cache_miss_not_error(tmp_path):
+    store, tuned, _ = _tuned_store(tmp_path, [MM_512])
+    path = store.dispatch_path(MATMUL.name, TPU_V5E.name)
+    path.write_text(path.read_text().replace('"format":2', '"format":1', 1))
+    assert store.load_dispatch(MATMUL.name, TPU_V5E.name) is None
+    cache = DispatchCache(store=store)
+    STATS.reset()
+    cand = cache.best_variant(MATMUL, TPU_V5E, MM_512)       # must not raise
+    assert cache.stats.cold_builds == 1 and STATS.enumerate_calls == 1
+    assert cand == best_variant(MATMUL, TPU_V5E, MM_512, use_cache=False)
+
+
+# ---------------------------------------------------------------------------
+# calibration fit + compaction
+# ---------------------------------------------------------------------------
+
+def test_calibration_fit_predicts_positive_times(tmp_path):
+    store, tuned, samples = _tuned_store(tmp_path, [MM_256, MM_512])
+    cal = tuned["calibration"]
+    assert cal["n_samples"] == sum(s.us is not None for s in samples)
+    assert cal["rms_log_residual"] >= 0
+    table = store.load_dispatch(MATMUL.name, TPU_V5E.name)
+    fit = fit_family(MATMUL, table, samples)
+    leaf = serde.obj_to_leaf(
+        table["leaves"][str(samples[0].leaf_index)])
+    p = predict_us(fit, MATMUL, leaf.plan, samples[0].assignment,
+                   samples[0].data, table["machine_bindings"])
+    assert p is not None and p > 0
+
+
+def test_compaction_finds_reduced_covering_set(tmp_path):
+    """Acceptance: >= 1 bucket where a reduced variant set stays within
+    tolerance.  The fake timer makes one variant fastest everywhere, so the
+    greedy cover must collapse every bucket onto a single variant."""
+    _, tuned, samples = _tuned_store(tmp_path, [MM_256, MM_512])
+    comp = tuned["compaction"]
+    assert comp["buckets_total"] == 2
+    assert comp["buckets_covered"] == comp["buckets_total"]
+    assert len(comp["variants"]) < comp["total_variants_measured"]
+    assert len(comp["variants"]) == 1
+    covered = [b for b, rec in comp["per_bucket"].items()
+               if rec is not None and rec["regret"] <= comp["tolerance"]]
+    assert len(covered) >= 1
+
+
+def test_compaction_respects_tolerance(tmp_path):
+    """With zero tolerance every bucket needs its exact argmin variant."""
+
+    def per_bucket_best(family, plan, assignment, data, cfg):
+        # fastest variant differs per bucket: s=2 at 256, s=8 at 512
+        want = 2 if data["M"] <= 256 else 8
+        us = 10.0 if assignment["s"] == want else 1000.0 + assignment["bk"]
+        return [us * 1e-6] * max(1, cfg.iters)
+
+    _, tuned, _ = _tuned_store(tmp_path, [MM_256, MM_512], tolerance=0.0,
+                               timer=per_bucket_best)
+    comp = tuned["compaction"]
+    assert comp["buckets_covered"] == comp["buckets_total"] == 2
+    assert len(comp["variants"]) == 2
+
+
+def test_compaction_tie_break_prefers_lower_regret():
+    """Two variants covering the same buckets: the greedy cover must pick
+    the one with lower total relative regret."""
+    from repro.tuning.compact import compact_table as ct
+    from repro.tuning.measure import MeasuredSample
+
+    def sample(bucket, pos, asg, us):
+        return MeasuredSample(bucket=bucket, entry_index=pos, leaf_index=0,
+                              assignment=asg, score=1.0,
+                              data={"M": 256}, us=us)
+
+    samples = [
+        sample("M256", 0, {"s": 1}, 100.0),   # best
+        sample("M256", 1, {"s": 2}, 101.0),   # regret 0.01
+        sample("M256", 2, {"s": 4}, 108.0),   # regret 0.08
+        sample("M512", 0, {"s": 1}, 200.0),   # best
+        sample("M512", 1, {"s": 2}, 202.0),   # regret 0.01
+        sample("M512", 2, {"s": 4}, 216.0),   # regret 0.08
+    ]
+    # drop the per-bucket best so s=2 and s=4 both cover both buckets and
+    # tie on coverage; only regret can break the tie
+    tied = [s for s in samples if s.assignment["s"] != 1]
+    comp = ct({"buckets": {}}, tied, tolerance=0.10)["compaction"]
+    assert comp["variants"] == ["leaf0|s=2"]
+
+
+def test_warm_kernel_dispatch_reports_rank_source():
+    """Serving warm-up labels every pick with the tier that decided it
+    (stats-delta attribution); with no artifact store everything is cold."""
+    from repro.configs import get_smoke_config
+    from repro.runtime.serving import warm_kernel_dispatch
+    picks = warm_kernel_dispatch(get_smoke_config("llama3_8b"), max_len=128)
+    assert picks
+    for info in picks.values():
+        assert info["rank_source"] == "cold"
+        assert info["candidate"].score >= 0
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke (the CI dry-run contract)
+# ---------------------------------------------------------------------------
+
+def test_tune_artifacts_cli_dry_run(tmp_path):
+    import os
+    import subprocess
+    import sys
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    store = ArtifactStore(tmp_path)
+    compile_family(MATMUL, store, machines=[TPU_V5E], shapes=[MM_512])
+    proc = subprocess.run(
+        [sys.executable, os.path.join(repo, "scripts", "tune_artifacts.py"),
+         "--family", "matmul", "--machine", "tpu_v5e",
+         "--out", str(tmp_path), "--dry-run"],
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "[dry-run] matmul/tpu_v5e" in proc.stdout
+    # dry run plans but never measures: the table on disk is unchanged (v2,
+    # no tuning sections)
+    table = store.load_dispatch(MATMUL.name, TPU_V5E.name)
+    assert "measured_ranks" not in table
