@@ -3,14 +3,20 @@
 
 Compares a ``benchmarks/run.py --json`` output file against
 ``benchmarks/baseline.json`` and exits non-zero when a gated row regresses
-by more than ``--max-ratio`` (wall-time ratio, default 2.0).  Rows absent
-from the measurement fail loudly — a silently skipped benchmark is a
-regression in itself.  Rows faster than the baseline print an invitation to
-ratchet the committed number down.
+by more than ``--max-ratio`` (wall-time ratio, default 2.0).  Both missing
+directions fail loudly:
+
+- a baseline row with no measured counterpart (a renamed/dropped/not-run
+  benchmark) — a silently skipped benchmark is a regression in itself;
+- with ``--strict``, a measured row with no baseline counterpart — a new
+  benchmark that nobody gates silently stops being a perf trajectory.
+
+Rows faster than the baseline print an invitation to ratchet the committed
+number down.
 
     python scripts/check_bench.py BENCH_dispatch.json \
         --baseline benchmarks/baseline.json \
-        --key dispatch_cold_matmul --max-ratio 2.0
+        --key dispatch_cold_matmul --max-ratio 2.0 --strict
 """
 from __future__ import annotations
 
@@ -34,6 +40,10 @@ def main(argv=None) -> int:
                          "in the baseline file)")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail when measured_us > ratio * baseline_us")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on measured rows absent from the "
+                         "baseline (every benchmark the CI job runs must "
+                         "be gated)")
     args = ap.parse_args(argv)
 
     measured = load_rows(args.measured)
@@ -67,6 +77,14 @@ def main(argv=None) -> int:
                 if ratio < 0.5 else ""
             print(f"[GATE OK]   {key}: {us:.1f}us vs baseline "
                   f"{base_us:.1f}us ({ratio:.2f}x){note}")
+
+    if args.strict:
+        ungated = sorted(set(measured) - set(baseline.get("rows", {})))
+        for key in ungated:
+            print(f"[GATE FAIL] {key}: measured but absent from "
+                  f"{args.baseline} (add a baseline row so it stays gated)",
+                  file=sys.stderr)
+            failures += 1
     return 1 if failures else 0
 
 

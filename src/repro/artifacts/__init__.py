@@ -5,19 +5,22 @@
 - :mod:`repro.artifacts.store`    — filesystem layout + forgiving loads
 - :mod:`repro.artifacts.compile`  — offline compiler (trees + per-machine
   dispatch tables), driven by ``scripts/compile_artifacts.py``
-- :mod:`repro.artifacts.dispatch` — runtime ``DispatchCache``: memory LRU ->
-  disk artifact -> cold rebuild; makes ``best_variant`` an O(1) lookup
+- :mod:`repro.artifacts.dispatch` — runtime ``DispatchCache``: frozen plan
+  fast lane -> memory LRU -> disk artifact -> cold rebuild; makes
+  ``best_variant`` an O(1) lookup and a frozen warm-path lookup lock-free
 """
 from .serde import FORMAT_VERSION, ArtifactFormatError
 from .store import ArtifactStore
-from .dispatch import (DispatchCache, DispatchStats, bucket_key,
+from .dispatch import (DispatchCache, DispatchStats, FrozenDispatchPlan,
+                       FrozenEntry, bucket_key, frozen_key,
                        get_default_cache, set_default_cache)
 from .compile import (DEFAULT_DATA_GRIDS, build_dispatch_table, compile_all,
                       compile_family)
 
 __all__ = [
     "FORMAT_VERSION", "ArtifactFormatError", "ArtifactStore",
-    "DispatchCache", "DispatchStats", "bucket_key", "get_default_cache",
-    "set_default_cache", "DEFAULT_DATA_GRIDS", "build_dispatch_table",
-    "compile_all", "compile_family",
+    "DispatchCache", "DispatchStats", "FrozenDispatchPlan", "FrozenEntry",
+    "bucket_key", "frozen_key", "get_default_cache", "set_default_cache",
+    "DEFAULT_DATA_GRIDS", "build_dispatch_table", "compile_all",
+    "compile_family",
 ]

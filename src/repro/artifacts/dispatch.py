@@ -1,8 +1,16 @@
 """O(1) runtime dispatch over precompiled case discussions.
 
 ``DispatchCache.best_variant`` resolves a (family, machine, data) triple
-through three tiers:
+through a frozen fast lane plus three tiers:
 
+  0. **frozen plan** — an immutable snapshot built by :meth:`DispatchCache.
+     freeze` from warm-up triples (``warm_kernel_dispatch`` feeds it).  The
+     read path (:meth:`DispatchCache.warm_callable`) is a single GIL-atomic
+     plain-dict lookup: no lock, no key re-sorting (canonical keys are
+     ``frozenset`` item views; steady-state keys are learned call-site item
+     tuples), and each entry carries the **pre-instantiated kernel
+     callables** so a warm op call never rebuilds a ``pallas_call``.
+     Misses fall through to the locked tiers;
   1. **memory LRU** — exact-key memo of resolved :class:`Candidate`s; a
      recurring triple (the serving steady state) costs one dict lookup;
   2. **disk artifact** — a per-machine dispatch table compiled offline
@@ -35,14 +43,18 @@ Invariants this module maintains (tests enforce them):
   to tier 3;
 - **parity without tuning** — a table with no ``measured_ranks`` section
   resolves exactly as the symbolic cold path would (asserted by the
-  artifact/tuning test suites).
+  artifact/tuning test suites);
+- **frozen parity** — ``freeze`` snapshots resolutions produced by the very
+  tiers above, so with and without a frozen plan every triple resolves to
+  the same candidate (asserted by the fast-lane tests).
 """
 from __future__ import annotations
 
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, FrozenSet, Iterable, List, Mapping,
+                    Optional, Sequence, Tuple)
 
 from ..core.constraints import Verdict
 from ..core.params import MachineDescription
@@ -52,6 +64,83 @@ from . import serde
 from .store import ArtifactStore
 
 DispatchKey = Tuple[str, str, Tuple[Tuple[str, int], ...]]
+FrozenKey = Tuple[str, str, FrozenSet[Tuple[str, int]]]
+
+
+def frozen_key(family_name: str, machine_name: str,
+               data: Mapping[str, int]) -> FrozenKey:
+    """Fast-lane key: hashing a ``frozenset`` skips the LRU key's sort."""
+    return (family_name, machine_name,
+            frozenset((k, int(v)) for k, v in data.items()))
+
+
+@dataclass(frozen=True)
+class FrozenEntry:
+    """One warm-up triple's snapshot: the resolved candidate, the tier that
+    decided it, and the memoized kernel callables for both ``interpret``
+    modes (identity-stable — built once through the family's instantiation
+    cache, so jit tracing keys never churn)."""
+
+    candidate: Candidate
+    source: str                            # "measured" | "symbolic" | "cold"
+    fns: Tuple[Callable, Callable]         # (interpret=False, interpret=True)
+
+
+class FrozenDispatchPlan:
+    """Immutable (family, machine, shape) -> :class:`FrozenEntry` resolver.
+
+    Once constructed the entry dict is never mutated, so concurrent readers
+    need no lock: ``DispatchCache.freeze`` publishes a *new* plan object and
+    swaps the reference, which is atomic under the GIL.
+
+    The steady-state lookup (:meth:`DispatchCache.warm_callable`) keys an
+    *fns alias table* on ``(family object, machine name, items tuple,
+    interpret)`` and maps straight to the ready kernel callable: the family
+    object hashes by identity, the machine name's string hash is cached,
+    and the items tuple is whatever ordering the call site builds — no
+    sort, no per-item ``int()`` coercion, no intermediate entry object.
+    First contact from a call site goes through the canonical
+    order-insensitive :func:`frozen_key` (:meth:`learn_fn`) and memoizes
+    the cheap key.  Alias inserts are plain-dict stores (GIL-atomic,
+    monotonic, bounded by frozen-triples x call sites x 2); the entry map
+    itself stays frozen."""
+
+    __slots__ = ("_entries", "_fns", "triples")
+
+    def __init__(self, entries: Mapping[FrozenKey, FrozenEntry],
+                 triples: Tuple[Tuple[FamilySpec, MachineDescription,
+                                      Mapping[str, int]], ...] = ()):
+        self._entries: Dict[FrozenKey, FrozenEntry] = dict(entries)
+        self._fns: Dict[Tuple[Any, str, Tuple[Tuple[str, int], ...], bool],
+                        Callable] = {}
+        #: the (family, machine, data) warm-up set this plan snapshots —
+        #: kept so a late store attach can re-freeze the same triples
+        #: against the new tables instead of pinning stale answers
+        self.triples = tuple(triples)
+
+    def get(self, family_name: str, machine_name: str,
+            data: Mapping[str, int]) -> Optional[FrozenEntry]:
+        return self._entries.get(frozen_key(family_name, machine_name, data))
+
+    def learn_fn(self, family: FamilySpec, machine_name: str,
+                 items: Tuple[Tuple[str, int], ...],
+                 interpret: bool) -> Optional[Callable]:
+        """Slow half of the fns-alias lookup: canonical resolution + alias
+        memoization for this call site's item ordering."""
+        ent = self._entries.get(
+            frozen_key(family.name, machine_name, dict(items)))
+        if ent is None:
+            return None
+        fn = ent.fns[1 if interpret else 0]
+        self._fns[(family, machine_name, items, interpret)] = fn
+        return fn
+
+    def entries(self) -> Dict[FrozenKey, FrozenEntry]:
+        """Copy of the entry map (freeze merges through this)."""
+        return dict(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
 
 
 def bucket_key(data: Mapping[str, int]) -> str:
@@ -65,19 +154,32 @@ def bucket_key(data: Mapping[str, int]) -> str:
 
 @dataclass
 class DispatchStats:
+    """Per-cache resolution counters.
+
+    ``memory_hits``/``disk_hits``/``cold_builds`` are incremented under the
+    cache lock — every locked-tier resolution bumps exactly one of them, so
+    their sum equals the number of non-frozen ``best_variant`` calls even
+    under concurrency (the regression tests assert this).  ``frozen_hits``
+    is bumped on the lock-free ``best_variant``/``frozen_entry`` fast paths
+    and is therefore *monotonic but approximate* under extreme contention —
+    observability must not cost the hot path a lock.  ``warm_callable``,
+    the nanosecond lane, is deliberately uncounted (see its docstring)."""
+
     memory_hits: int = 0
     disk_hits: int = 0
     cold_builds: int = 0
     measured_hits: int = 0        # disk hits served in measured (tuned) order
+    frozen_hits: int = 0          # fast-lane hits (lock-free, approximate)
 
     def reset(self) -> None:
         self.memory_hits = self.disk_hits = self.cold_builds = 0
-        self.measured_hits = 0
+        self.measured_hits = self.frozen_hits = 0
 
     def as_dict(self) -> Dict[str, int]:
         return {"memory_hits": self.memory_hits, "disk_hits": self.disk_hits,
                 "cold_builds": self.cold_builds,
-                "measured_hits": self.measured_hits}
+                "measured_hits": self.measured_hits,
+                "frozen_hits": self.frozen_hits}
 
 
 class DispatchCache:
@@ -88,8 +190,15 @@ class DispatchCache:
     the (idempotent) tier-2/3 work, with one winner filling the LRU."""
 
     def __init__(self, store: Optional[ArtifactStore] = None,
-                 maxsize: int = 4096):
+                 maxsize: int = 4096,
+                 store_resolver: Optional[
+                     Callable[[], Optional[ArtifactStore]]] = None):
         self.store = store
+        # re-probed on tier-2/3 entry while no store is attached (an artifact
+        # dir that appears after first dispatch must not be ignored forever);
+        # deliberately NOT consulted on the frozen/LRU hit paths, which stay
+        # syscall-free
+        self._store_resolver = store_resolver
         self.maxsize = maxsize
         self.stats = DispatchStats()
         # key -> (candidate, source) where source records which ranking
@@ -102,6 +211,11 @@ class DispatchCache:
                                           Dict[int, Leaf]]]] = {}
         self._trees: Dict[str, Optional[List[Leaf]]] = {}
         self._lock = threading.Lock()
+        # fast lane: swapped atomically by freeze(), read without the lock
+        self.frozen_plan: Optional[FrozenDispatchPlan] = None
+        # bumped by unfreeze()/clear(); attach_store's re-freeze aborts if
+        # it changed, so an explicit drop is never silently resurrected
+        self._unfreeze_gen = 0
 
     # -- public API ----------------------------------------------------------
     def best_variant(self, family: FamilySpec, machine: MachineDescription,
@@ -117,6 +231,21 @@ class DispatchCache:
         offline ranking), or ``"cold"`` (tier-3 rebuild).  A memory hit
         returns the source recorded when the triple was first resolved, so
         attribution is race-free under concurrent callers."""
+        frozen = self.frozen_plan                 # snapshot: freeze() swaps whole
+        if frozen is not None:
+            ent = frozen.get(family.name, machine.name, data)
+            if ent is not None:
+                self.stats.frozen_hits += 1   # lock-free => approximate
+                return ent.candidate, ent.source
+        return self._resolve_tiers(family, machine, data)
+
+    def _resolve_tiers(self, family: FamilySpec,
+                       machine: MachineDescription,
+                       data: Mapping[str, int]) -> Tuple[Candidate, str]:
+        """Tiers 1-3 only (no frozen-plan consult): the shared resolution
+        body, called directly by ``freeze`` so a *re*-freeze re-reads the
+        (possibly newly attached or re-tuned) tables instead of replaying
+        its own previous snapshot."""
         key: DispatchKey = (family.name, machine.name,
                             tuple(sorted((k, int(v)) for k, v in data.items())))
         with self._lock:
@@ -153,15 +282,160 @@ class DispatchCache:
             self._tables.clear()
             self._trees.clear()
             self.stats.reset()
+            self.frozen_plan = None
+            self._unfreeze_gen += 1
+
+    def attach_store(self, store: Optional[ArtifactStore]) -> None:
+        """Swap the disk tier, dropping table/tree memos pinned against the
+        old store (``get_default_cache`` uses this when an artifact dir
+        appears after first dispatch).  The LRU is dropped too: triples
+        resolved cold before the store appeared must re-resolve against the
+        (possibly tuned) tables, not stay pinned to their cold answer.
+        A frozen plan is *re-frozen* over its own warm-up triples for the
+        same reason — the serving hot path must not keep replaying
+        pre-artifact cold picks (tier parity: the re-freeze resolves
+        through the new tables)."""
+        with self._lock:
+            self.store = store
+            self._tables.clear()
+            self._trees.clear()
+            self._lru.clear()
+            plan, self.frozen_plan = self.frozen_plan, None
+            gen = self._unfreeze_gen
+        if plan is not None and plan.triples:
+            # re-pin against the new store — unless someone unfreezes while
+            # we resolve, in which case their drop wins (no resurrection)
+            self.freeze(plan.triples, _expect_unfreeze_gen=gen)
 
     def __len__(self) -> int:
         return len(self._lru)
 
+    # -- tier 0: frozen dispatch plans ---------------------------------------
+    def freeze(self, triples: Iterable[Tuple[FamilySpec, MachineDescription,
+                                             Mapping[str, int]]],
+               *, _expect_unfreeze_gen: Optional[int] = None
+               ) -> Optional[FrozenDispatchPlan]:
+        """Snapshot resolutions for ``triples`` into the lock-free fast lane.
+
+        Each triple is resolved through the normal tiers (warming the LRU),
+        then pinned — candidate, deciding source, and the memoized kernel
+        callables for both ``interpret`` modes — into a fresh immutable
+        :class:`FrozenDispatchPlan` merged over any previous plan (freezing
+        is monotonic until :meth:`unfreeze`/:meth:`clear`).  Publishing is a
+        single reference swap, so resolves racing a concurrent ``freeze``
+        see either the old or the new plan, never a torn one.
+
+        Parity is structural: a frozen entry replays exactly what the tiers
+        resolved at freeze time, and the tiers themselves are deterministic
+        for fixed artifacts — so freezing can change the cost of a lookup,
+        never its answer.  Resolution deliberately bypasses the existing
+        frozen plan (:meth:`_resolve_tiers`): re-freezing a triple re-reads
+        the current tables, so warm-up after compiling/tuning artifacts
+        refreshes stale cold snapshots instead of re-pinning them."""
+        resolved: Dict[FrozenKey, FrozenEntry] = {}
+        new_triples: Dict[FrozenKey, Tuple[Any, Any, Mapping[str, int]]] = {}
+        for family, machine, data in triples:
+            cand, source = self._resolve_tiers(family, machine, data)
+            fns = tuple(
+                family.instantiate(cand.plan, cand.assignment,
+                                   interpret=interp,
+                                   leaf_index=cand.leaf_index)
+                for interp in (False, True))
+            key = frozen_key(family.name, machine.name, data)
+            resolved[key] = FrozenEntry(candidate=cand, source=source,
+                                        fns=fns)
+            new_triples[key] = (family, machine, data)
+        with self._lock:
+            if (_expect_unfreeze_gen is not None
+                    and self._unfreeze_gen != _expect_unfreeze_gen):
+                return self.frozen_plan       # a concurrent unfreeze won
+            old = self.frozen_plan
+            merged = old.entries() if old is not None else {}
+            merged.update(resolved)
+            all_triples = {frozen_key(f.name, m.name, d): (f, m, d)
+                           for f, m, d in (old.triples if old is not None
+                                           else ())}
+            all_triples.update(new_triples)
+            plan = FrozenDispatchPlan(merged, tuple(all_triples.values()))
+            self.frozen_plan = plan
+        return plan
+
+    def unfreeze(self) -> None:
+        """Drop the frozen plan; the locked tiers keep serving.
+
+        Taken under the lock so a ``freeze`` racing this call cannot
+        resurrect dropped entries: freeze's merge-and-publish also holds
+        the lock, so it sees either the plan (drop wins afterwards) or
+        ``None`` (merge starts empty) — never a torn in-between.  The
+        generation bump additionally aborts an in-flight ``attach_store``
+        re-freeze, which captured its plan *before* this drop."""
+        with self._lock:
+            self.frozen_plan = None
+            self._unfreeze_gen += 1
+
+    def frozen_entry(self, family_name: str, machine_name: str,
+                     data: Mapping[str, int]) -> Optional[FrozenEntry]:
+        """Lock-free fast-lane lookup by data mapping: the entry with the
+        pre-built callables, or ``None`` when the triple was never frozen
+        (callers fall back to the locked tiers)."""
+        frozen = self.frozen_plan
+        if frozen is None:
+            return None
+        ent = frozen.get(family_name, machine_name, data)
+        if ent is not None:
+            self.stats.frozen_hits += 1       # lock-free => approximate
+        return ent
+
+    def warm_callable(self, family: FamilySpec,
+                      machine: MachineDescription,
+                      items: Tuple[Tuple[str, int], ...],
+                      interpret: bool = False) -> Callable:
+        """The warm op path (``kernels.ops`` wrappers call this per op):
+        resolve (family, machine, items) straight to a ready kernel callable.
+
+        Frozen hit: one alias-dict get, no lock, no key sort, no entry
+        indirection, no rebuild — this is the hottest function in the
+        serving steady state (per-call ns here multiply by tokens x ops x
+        requests), which is also why it deliberately does NOT bump
+        ``stats.frozen_hits``: the counted observability surfaces are
+        ``best_variant*``/``frozen_entry``, and benchmarks time this lane
+        directly.  Miss: locked LRU resolve + the family's *memoized*
+        ``instantiate`` — still zero ``pallas_call`` rebuilds, identical
+        candidate (frozen parity), just a lock and a sorted key dearer.
+
+        ``items`` is the data mapping as an items tuple (any order); the
+        first call from a given site teaches the plan its ordering."""
+        frozen = self.frozen_plan
+        if frozen is not None:
+            fn = frozen._fns.get((family, machine.name, items, interpret))
+            if fn is not None:
+                return fn
+            fn = frozen.learn_fn(family, machine.name, items, interpret)
+            if fn is not None:
+                return fn
+        # straight to tiers 1-3: the frozen plan was just consulted (or is
+        # absent), re-probing it inside best_variant would be dead work
+        cand = self._resolve_tiers(family, machine, dict(items))[0]
+        return family.instantiate(cand.plan, cand.assignment,
+                                  interpret=interpret,
+                                  leaf_index=cand.leaf_index)
+
     # -- tier 2: precompiled dispatch tables ---------------------------------
+    def _try_attach_store(self) -> bool:
+        """Late store resolution: ask the resolver (when configured) whether
+        an artifact dir has appeared since construction."""
+        if self._store_resolver is None:
+            return False
+        store = self._store_resolver()
+        if store is None:
+            return False
+        self.attach_store(store)
+        return True
+
     def _table(self, family_name: str, machine_name: str
                ) -> Optional[Tuple[Dict[str, Any], Dict[int, Leaf]]]:
         """Load + parse a dispatch table once per (family, machine)."""
-        if self.store is None:
+        if self.store is None and not self._try_attach_store():
             return None
         tkey = (family_name, machine_name)
         with self._lock:
@@ -287,7 +561,7 @@ class DispatchCache:
 
     # -- tier 3 support: disk tree beats in-process rebuild ------------------
     def _tree(self, family: FamilySpec) -> Optional[Sequence[Leaf]]:
-        if self.store is None:
+        if self.store is None and not self._try_attach_store():
             return None
         with self._lock:
             if family.name in self._trees:
@@ -305,19 +579,43 @@ _default_cache: Optional[DispatchCache] = None
 _default_lock = threading.Lock()
 
 
+def _resolve_env_store() -> Optional[ArtifactStore]:
+    import os
+    root = os.environ.get("REPRO_ARTIFACT_DIR", "artifacts")
+    return ArtifactStore(root) if os.path.isdir(root) else None
+
+
 def get_default_cache() -> DispatchCache:
+    """The process-wide cache, creating it on first touch.
+
+    The auto-created default carries a store *resolver*: while no store is
+    attached, the artifact dir (``REPRO_ARTIFACT_DIR`` or ``./artifacts``)
+    is re-probed whenever a resolution reaches tier 2/3 — an artifact dir
+    compiled or an env var exported *after* the first dispatch is picked
+    up, not silently ignored forever.  A cache installed explicitly via
+    :func:`set_default_cache` keeps whatever store the caller chose — tests
+    rely on a store-less cache *staying* store-less for isolation.
+
+    Double-checked locking: once a cache is installed, this is a lock-free
+    module-global read (GIL-atomic) — it sits on the warm op path, where
+    the old per-call lock acquire was measurable."""
     global _default_cache
+    cache = _default_cache
+    if cache is not None:
+        return cache
     with _default_lock:
         if _default_cache is None:
-            import os
-            root = os.environ.get("REPRO_ARTIFACT_DIR", "artifacts")
-            store = ArtifactStore(root) if os.path.isdir(root) else None
-            _default_cache = DispatchCache(store=store)
+            _default_cache = DispatchCache(store=_resolve_env_store(),
+                                           store_resolver=_resolve_env_store)
         return _default_cache
 
 
 def set_default_cache(cache: Optional[DispatchCache]) -> None:
-    """Install (or with ``None`` reset) the process-wide dispatch cache."""
+    """Install (or with ``None`` reset) the process-wide dispatch cache.
+
+    ``None`` re-arms the environment probe: the next ``get_default_cache``
+    builds a fresh default that resolves its store from the environment.
+    An explicit cache is installed as-is (no resolver is grafted on)."""
     global _default_cache
     with _default_lock:
         _default_cache = cache

@@ -23,6 +23,7 @@ from ..core.counters import Counter, performance, resource
 from ..core.plan import KernelPlan, ParamDomain
 from ..core.polynomial import Poly, V
 from ..core.strategies import Strategy
+from .instantiate_cache import CachedInstantiationMixin
 
 NEG_INF = -1e30
 
@@ -118,7 +119,7 @@ def pallas_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out[:, :sq, :]
 
 
-class FlashAttentionFamily:
+class FlashAttentionFamily(CachedInstantiationMixin):
     name = "flash_attention"
 
     def initial_plan(self) -> KernelPlan:
@@ -173,8 +174,8 @@ class FlashAttentionFamily:
         reuse = min(1.0, (bq * bkv) / (256 * 256))
         return fill * min(1.0, waves) * (0.5 + 0.5 * reuse)
 
-    def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
-                    interpret: bool = False) -> Callable:
+    def _build(self, plan: KernelPlan, assignment: Mapping[str, int],
+               interpret: bool = False) -> Callable:
         return functools.partial(
             pallas_flash_attention, bq=int(assignment["bq"]),
             bk=int(assignment["bkv"]), interpret=interpret)

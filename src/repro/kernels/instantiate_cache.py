@@ -1,0 +1,146 @@
+"""Instantiation fast lane: memoized kernel builders with stable identity.
+
+The paper's offline/online split resolves the *case discussion* before the
+hot loop — but resolving a :class:`~repro.core.select.Candidate` is only half
+of a warm op call.  The other half is ``FamilySpec.instantiate``, which
+historically returned a **fresh** ``functools.partial`` (wrapping
+``pl.pallas_call`` construction) on every invocation.  That churns two
+things serving cares about:
+
+- per-call Python allocation on the steady-state path, and
+- the identity of the callable handed to jax — every fresh partial is a new
+  tracing key, so downstream ``jax.jit`` caches never stabilize.
+
+:class:`CachedInstantiationMixin` fixes both: each kernel family implements
+the raw builder as ``_build(plan, assignment, interpret)`` and inherits an
+``instantiate`` that memoizes on
+
+    ``(family, leaf_index, frozen assignment, frozen plan flags, interpret)``
+
+so repeated resolutions of the same triple return the *same object*.  The
+plan flags fully determine the builder's behaviour (``_build`` consumes only
+flags + assignment), so the optional ``leaf_index`` hint can only split the
+cache, never alias two different kernels onto one entry.
+
+Thread notes: reads are lock-free (GIL-atomic ``dict.get``); misses take a
+per-cache lock, double-check, build once, and publish.  Eviction is
+insertion-order (FIFO) at ``maxsize`` — identity is stable while an entry
+lives, and the cap is far above any real family's variant count, so eviction
+is a memory backstop, not an expected event.  ``hits`` is maintained without
+the lock and may undercount under extreme contention; ``misses`` (the number
+of builder invocations — what the zero-rebuild tests assert on) is exact.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+from ..core.plan import KernelPlan
+
+InstantiationKey = Tuple[str, Optional[int], Tuple[Tuple[str, Any], ...],
+                         Tuple[Tuple[str, int], ...], bool]
+
+#: Every cache ever constructed, so tests can reset the process state.
+#: Families are module singletons — this list stays tiny and never cycles.
+_ALL_CACHES: List["InstantiationCache"] = []
+_REGISTRY_LOCK = threading.Lock()
+
+
+def freeze_flags(flags: Mapping[str, Any]) -> Tuple[Tuple[str, Any], ...]:
+    """Canonical hashable form of a plan's flag dict."""
+    return tuple(sorted(flags.items()))
+
+
+def freeze_assignment(assignment: Mapping[str, int]
+                      ) -> Tuple[Tuple[str, int], ...]:
+    """Canonical hashable form of a program-parameter assignment."""
+    return tuple(sorted((k, int(v)) for k, v in assignment.items()))
+
+
+def instantiation_key(family_name: str, plan: KernelPlan,
+                      assignment: Mapping[str, int], interpret: bool,
+                      leaf_index: Optional[int] = None) -> InstantiationKey:
+    return (family_name, leaf_index, freeze_flags(plan.flags),
+            freeze_assignment(assignment), bool(interpret))
+
+
+class InstantiationCache:
+    """Identity-stable memo of built kernel callables (one per family)."""
+
+    def __init__(self, maxsize: int = 512):
+        self.maxsize = maxsize
+        self.hits = 0                      # approximate (lock-free reads)
+        self.misses = 0                    # exact (builder invocations)
+        self._fns: Dict[InstantiationKey, Callable] = {}
+        self._lock = threading.Lock()
+        with _REGISTRY_LOCK:
+            _ALL_CACHES.append(self)
+
+    def get_or_build(self, key: InstantiationKey,
+                     builder: Callable[[], Callable]) -> Callable:
+        fn = self._fns.get(key)            # lock-free warm path
+        if fn is not None:
+            self.hits += 1
+            return fn
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is None:
+                self.misses += 1
+                fn = builder()
+                if len(self._fns) >= self.maxsize:
+                    self._fns.pop(next(iter(self._fns)))   # FIFO backstop
+                self._fns[key] = fn
+        return fn
+
+    def clear(self) -> None:
+        with self._lock:
+            self._fns.clear()
+            self.hits = self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+
+def clear_instantiation_caches() -> None:
+    """Reset every family's instantiation cache (test isolation)."""
+    with _REGISTRY_LOCK:
+        caches = list(_ALL_CACHES)
+    for c in caches:
+        c.clear()
+
+
+class CachedInstantiationMixin:
+    """Gives a kernel family an identity-stable ``instantiate``.
+
+    Families implement ``_build(plan, assignment, interpret)`` — the raw
+    constructor that wires ``pl.pallas_call`` — and inherit the memoized
+    public entry point.  ``instantiate_fresh`` bypasses the cache (used by
+    benchmarks to measure the pre-fast-lane rebuild cost)."""
+
+    name: str
+
+    @property
+    def instantiation_cache(self) -> InstantiationCache:
+        cache = self.__dict__.get("_inst_cache")
+        if cache is None:                  # families are singletons; benign
+            cache = self.__dict__.setdefault("_inst_cache",
+                                             InstantiationCache())
+        return cache
+
+    def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
+                    interpret: bool = False, *,
+                    leaf_index: Optional[int] = None) -> Callable:
+        key = instantiation_key(self.name, plan, assignment, interpret,
+                                leaf_index)
+        return self.instantiation_cache.get_or_build(
+            key, lambda: self._build(plan, assignment, interpret))
+
+    def instantiate_fresh(self, plan: KernelPlan,
+                          assignment: Mapping[str, int],
+                          interpret: bool = False) -> Callable:
+        """The pre-fast-lane path: rebuild the callable, no memo."""
+        return self._build(plan, assignment, interpret)
+
+    def _build(self, plan: KernelPlan, assignment: Mapping[str, int],
+               interpret: bool) -> Callable:
+        raise NotImplementedError

@@ -25,6 +25,7 @@ from ..core.counters import Counter, performance, resource
 from ..core.plan import KernelPlan, ParamDomain
 from ..core.polynomial import Poly, V
 from ..core.strategies import Strategy
+from .instantiate_cache import CachedInstantiationMixin
 
 DT = 4
 
@@ -84,7 +85,7 @@ def pallas_jacobi1d(x: jax.Array, steps: int, *, B: int, s: int,
     return row[0, :n]
 
 
-class Jacobi1dFamily:
+class Jacobi1dFamily(CachedInstantiationMixin):
     name = "jacobi1d"
 
     def initial_plan(self) -> KernelPlan:
@@ -147,8 +148,8 @@ class Jacobi1dFamily:
         halo_overhead = (B * s) / (B * s + 2)
         return fill * min(1.0, waves) * halo_overhead
 
-    def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
-                    interpret: bool = False) -> Callable:
+    def _build(self, plan: KernelPlan, assignment: Mapping[str, int],
+               interpret: bool = False) -> Callable:
         return functools.partial(
             pallas_jacobi1d, B=int(assignment["B"]), s=int(assignment["s"]),
             cached=bool(plan.flags.get("vmem_cache", True)),

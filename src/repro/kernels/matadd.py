@@ -23,6 +23,7 @@ from ..core.counters import Counter, performance, resource
 from ..core.plan import KernelPlan, ParamDomain
 from ..core.polynomial import Poly, V
 from ..core.strategies import Strategy
+from .instantiate_cache import CachedInstantiationMixin
 
 DT = 4  # f32 bytes
 
@@ -51,7 +52,7 @@ def pallas_matadd(a: jax.Array, b: jax.Array, *, bm: int, bn: int, s: int,
     return out[:M, :N]
 
 
-class MataddFamily:
+class MataddFamily(CachedInstantiationMixin):
     name = "matadd"
 
     def initial_plan(self) -> KernelPlan:
@@ -119,8 +120,8 @@ class MataddFamily:
             / max(1, v.get("CORES", 1))
         return fill * min(1.0, waves) * min(1.0, (bm * bn * s) / 65536)
 
-    def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
-                    interpret: bool = False) -> Callable:
+    def _build(self, plan: KernelPlan, assignment: Mapping[str, int],
+               interpret: bool = False) -> Callable:
         return functools.partial(
             pallas_matadd, bm=int(assignment["bm"]), bn=int(assignment["bn"]),
             s=int(assignment["s"]), interpret=interpret)

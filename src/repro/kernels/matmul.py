@@ -25,6 +25,7 @@ from ..core.counters import Counter, performance, resource
 from ..core.plan import KernelPlan, ParamDomain
 from ..core.polynomial import Poly, V
 from ..core.strategies import Strategy
+from .instantiate_cache import CachedInstantiationMixin
 
 DIN = 2      # bf16 input bytes
 DACC = 4     # f32 accumulator bytes
@@ -115,7 +116,7 @@ def pallas_matmul(a: jax.Array, b: jax.Array, *, bm: int, bn: int, bk: int,
 _S_DOMAIN_BY_LEVEL = {0: (1, 2, 4, 8), 1: (1, 2)}
 
 
-class MatmulFamily:
+class MatmulFamily(CachedInstantiationMixin):
     name = "matmul"
 
     def initial_plan(self) -> KernelPlan:
@@ -244,9 +245,9 @@ class MatmulFamily:
         kamort = np.minimum(1.0, bk / 512)
         return fill * ai_norm * wave_eff * (0.5 + 0.5 * kamort)
 
-    # -- instantiation --------------------------------------------------------
-    def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
-                    interpret: bool = False) -> Callable:
+    # -- instantiation (memoized by CachedInstantiationMixin.instantiate) ----
+    def _build(self, plan: KernelPlan, assignment: Mapping[str, int],
+               interpret: bool = False) -> Callable:
         bm, bn = int(assignment["bm"]), int(assignment["bn"])
         bk, s = int(assignment["bk"]), int(assignment["s"])
         cached = bool(plan.flags.get("vmem_cache", True))

@@ -24,6 +24,7 @@ from ..core.counters import Counter, performance, resource
 from ..core.plan import KernelPlan, ParamDomain
 from ..core.polynomial import Poly, V
 from ..core.strategies import Strategy
+from .instantiate_cache import CachedInstantiationMixin
 
 
 def ssd_chunk(xc, ac, bc, cc, S_prev):
@@ -97,7 +98,7 @@ def pallas_ssd_scan(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
     return y[:seq]
 
 
-class SsdScanFamily:
+class SsdScanFamily(CachedInstantiationMixin):
     name = "ssd_scan"
 
     def initial_plan(self) -> KernelPlan:
@@ -149,8 +150,8 @@ class SsdScanFamily:
         carry_amort = C / (C + v.get("STATE", 64))
         return mxu_fill * carry_amort * min(1.0, sq / C / 8)
 
-    def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
-                    interpret: bool = False) -> Callable:
+    def _build(self, plan: KernelPlan, assignment: Mapping[str, int],
+               interpret: bool = False) -> Callable:
         return functools.partial(pallas_ssd_scan,
                                  chunk=int(assignment["chunk"]),
                                  interpret=interpret)

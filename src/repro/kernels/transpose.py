@@ -25,6 +25,7 @@ from ..core.counters import Counter, performance, resource
 from ..core.plan import KernelPlan, ParamDomain
 from ..core.polynomial import Poly, V
 from ..core.strategies import Strategy
+from .instantiate_cache import CachedInstantiationMixin
 
 DT = 4
 
@@ -68,7 +69,7 @@ def pallas_transpose(a: jax.Array, *, bm: int, bn: int, s: int,
     return out[:N, :M]
 
 
-class TransposeFamily:
+class TransposeFamily(CachedInstantiationMixin):
     name = "transpose"
 
     def initial_plan(self) -> KernelPlan:
@@ -142,8 +143,8 @@ class TransposeFamily:
             / max(1, v.get("CORES", 1))
         return fill * balance * min(1.0, waves)
 
-    def instantiate(self, plan: KernelPlan, assignment: Mapping[str, int],
-                    interpret: bool = False) -> Callable:
+    def _build(self, plan: KernelPlan, assignment: Mapping[str, int],
+               interpret: bool = False) -> Callable:
         return functools.partial(
             pallas_transpose, bm=int(assignment["bm"]),
             bn=int(assignment["bn"]), s=int(assignment["s"]),

@@ -32,14 +32,19 @@ PyTree = Any
 
 def warm_kernel_dispatch(cfg: ModelConfig, *,
                          machine: MachineDescription = TPU_V5E,
-                         max_len: int = 512) -> Dict[str, Any]:
+                         max_len: int = 512,
+                         freeze: bool = True) -> Dict[str, Any]:
     """Pre-resolve the kernel variants this model's serve path will ask for.
 
     Serving traffic hits the same (family, machine, shape) triples millions
     of times; resolving them once at engine start — ideally from the disk
     artifacts compiled by ``scripts/compile_artifacts.py`` — keeps every
     later ``select`` call an LRU hit, so no request ever pays for tree
-    enumeration.
+    enumeration.  With ``freeze=True`` (default) the resolved triples are
+    additionally snapshotted into the process cache's *frozen dispatch
+    plan* (:meth:`DispatchCache.freeze`): the steady-state read path then
+    takes no lock, re-sorts no keys, and returns the pre-instantiated
+    kernel callable — the warm-path fast lane serving decode rides.
 
     Returns ``{description: {"candidate": Candidate, "rank_source": str}}``
     where ``rank_source`` reports whether the pick was decided by a
@@ -56,21 +61,36 @@ def warm_kernel_dispatch(cfg: ModelConfig, *,
     from ..artifacts.dispatch import get_default_cache
     from ..kernels.ops import FAMILIES
     cache = get_default_cache()
-    picks: Dict[str, Any] = {}
+    wanted: List[Any] = []
 
-    def pick(label: str, family_name: str, data: Dict[str, int]) -> None:
-        cand, source = cache.best_variant_with_source(
-            FAMILIES[family_name], machine, data)
-        picks[label] = {"candidate": cand, "rank_source": source}
+    def want(label: str, family_name: str, data: Dict[str, int]) -> None:
+        wanted.append((label, family_name, data))
 
     d, hd = cfg.d_model, cfg.hd
     for sq in {max_len, 2 * max_len}:
-        pick(f"flash_attention@SQ{sq}", "flash_attention",
+        want(f"flash_attention@SQ{sq}", "flash_attention",
              {"SQ": sq, "HD": hd})
     for m, n, k in ((max_len, cfg.d_ff or 4 * d, d),     # MLP up-projection
                     (max_len, d, cfg.d_ff or 4 * d),     # MLP down-projection
                     (max_len, cfg.heads * hd, d)):       # QKV projection
-        pick(f"matmul@{m}x{n}x{k}", "matmul", {"M": m, "N": n, "K": k})
+        want(f"matmul@{m}x{n}x{k}", "matmul", {"M": m, "N": n, "K": k})
+
+    picks: Dict[str, Any] = {}
+    if freeze:
+        # freeze resolves through the locked tiers (never the old frozen
+        # plan), so a re-warm-up after compiling/tuning artifacts reports
+        # and pins FRESH resolutions; picks come from the published plan
+        plan = cache.freeze([(FAMILIES[f], machine, data)
+                             for _, f, data in wanted])
+        for label, fname, data in wanted:
+            ent = plan.get(fname, machine.name, data)
+            picks[label] = {"candidate": ent.candidate,
+                            "rank_source": ent.source}
+    else:
+        for label, fname, data in wanted:
+            cand, source = cache.best_variant_with_source(
+                FAMILIES[fname], machine, data)
+            picks[label] = {"candidate": cand, "rank_source": source}
     return picks
 
 

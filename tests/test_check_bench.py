@@ -1,0 +1,70 @@
+"""scripts/check_bench.py gating semantics (ISSUE 4 satellite).
+
+Both missing directions must fail: a baseline row with no measured
+counterpart (renamed/dropped/not-run benchmark), and — under ``--strict`` —
+a measured row nobody added a baseline for.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+import check_bench  # noqa: E402
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+@pytest.fixture
+def files(tmp_path):
+    baseline = _write(tmp_path, "baseline.json",
+                      {"rows": {"cold": {"us": 1000}, "warm": {"us": 10}}})
+    measured = _write(tmp_path, "measured.json",
+                      {"rows": [{"name": "cold", "us": 900, "derived": ""},
+                                {"name": "warm", "us": 9, "derived": ""}]})
+    return baseline, measured
+
+
+def test_all_rows_within_ratio_passes(files):
+    baseline, measured = files
+    assert check_bench.main([measured, "--baseline", baseline]) == 0
+
+
+def test_regression_fails(tmp_path, files):
+    baseline, _ = files
+    measured = _write(tmp_path, "slow.json",
+                      {"rows": [{"name": "cold", "us": 2500, "derived": ""},
+                                {"name": "warm", "us": 9, "derived": ""}]})
+    assert check_bench.main([measured, "--baseline", baseline]) == 1
+
+
+def test_baseline_row_without_measurement_fails(tmp_path, files):
+    """A renamed/dropped benchmark must not silently stop being gated."""
+    baseline, _ = files
+    measured = _write(tmp_path, "partial.json",
+                      {"rows": [{"name": "cold", "us": 900, "derived": ""}]})
+    assert check_bench.main([measured, "--baseline", baseline]) == 1
+
+
+def test_measured_row_without_baseline_needs_strict(tmp_path, files):
+    """--strict fails a measured-but-ungated row; default only warns not."""
+    baseline, _ = files
+    measured = _write(
+        tmp_path, "extra.json",
+        {"rows": [{"name": "cold", "us": 900, "derived": ""},
+                  {"name": "warm", "us": 9, "derived": ""},
+                  {"name": "brand_new_bench", "us": 5, "derived": ""}]})
+    assert check_bench.main([measured, "--baseline", baseline]) == 0
+    assert check_bench.main([measured, "--baseline", baseline,
+                             "--strict"]) == 1
+
+
+def test_explicit_key_missing_from_baseline_fails(files):
+    baseline, measured = files
+    assert check_bench.main([measured, "--baseline", baseline,
+                             "--key", "nonexistent"]) == 1

@@ -1,0 +1,152 @@
+"""DispatchCache under concurrency: determinism, stats accounting, and
+frozen-plan safety (ISSUE 4 satellite).
+
+N threads resolving an overlapping triple set through ONE shared cache —
+with triples landing in different tiers (memory LRU, disk artifact, cold
+rebuild) — must all see byte-identical candidates, and the locked-tier
+stats must sum exactly to the number of resolutions.  The frozen-plan read
+path must stay safe while another thread keeps republishing plans.
+"""
+import json
+import threading
+
+import pytest
+
+from repro.artifacts import ArtifactStore, DispatchCache, compile_family
+from repro.artifacts.dispatch import set_default_cache
+from repro.core import TPU_V5E, best_variant
+from repro.kernels.ops import FAMILIES
+
+MATMUL = FAMILIES["matmul"]
+MATADD = FAMILIES["matadd"]
+
+#: Overlapping triple set spanning tiers once a store holds the first two.
+TRIPLES = [
+    (MATMUL, {"M": 512, "N": 512, "K": 512}),      # disk (compiled below)
+    (MATMUL, {"M": 500, "N": 500, "K": 500}),      # disk, off-grid revalidate
+    (MATMUL, {"M": 320, "N": 320, "K": 320}),      # cold
+    (MATADD, {"M": 512, "N": 512}),                # cold (family w/o table)
+]
+N_THREADS = 8
+ROUNDS = 12
+
+
+@pytest.fixture(autouse=True)
+def _isolate_default_cache():
+    set_default_cache(DispatchCache())
+    yield
+    set_default_cache(None)
+
+
+def _candidate_bytes(cand):
+    """Canonical byte form — 'byte-identical' means identical here."""
+    return json.dumps({"leaf": cand.leaf_index,
+                       "assignment": dict(sorted(cand.assignment.items())),
+                       "flags": dict(sorted(cand.plan.flags.items())),
+                       "score": repr(cand.score)}, sort_keys=True).encode()
+
+
+def _run_threads(worker, n=N_THREADS):
+    errors = []
+
+    def guarded(i):
+        try:
+            worker(i)
+        except BaseException as e:                 # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=guarded, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+
+
+def test_concurrent_resolution_deterministic_and_accounted(tmp_path):
+    store = ArtifactStore(tmp_path)
+    compile_family(MATMUL, store, machines=[TPU_V5E],
+                   shapes=[dict(TRIPLES[0][1]), dict(TRIPLES[1][1])])
+    cache = DispatchCache(store=store)
+    results = [[] for _ in range(N_THREADS)]
+
+    def worker(i):
+        # stagger the walk so threads collide on different triples
+        order = TRIPLES[i % len(TRIPLES):] + TRIPLES[:i % len(TRIPLES)]
+        for _ in range(ROUNDS):
+            for fam, data in order:
+                results[i].append(_candidate_bytes(
+                    cache.best_variant(fam, TPU_V5E, data)))
+
+    _run_threads(worker)
+
+    # byte-identical candidates across every thread, per triple position
+    for i in range(1, N_THREADS):
+        mine = sorted(results[i])
+        assert mine == sorted(results[0])
+    # ... and identical to the single-threaded cold reference
+    ref = {id(t): _candidate_bytes(
+        best_variant(t[0], TPU_V5E, t[1], use_cache=False))
+        for t in TRIPLES}
+    assert set(results[0]) == set(ref.values())
+
+    # locked-tier accounting: every resolution bumped exactly one counter
+    total_calls = N_THREADS * ROUNDS * len(TRIPLES)
+    s = cache.stats
+    assert s.memory_hits + s.disk_hits + s.cold_builds == total_calls
+    assert s.frozen_hits == 0                      # nothing frozen here
+    assert s.disk_hits >= 2 and s.cold_builds >= 2
+    assert s.measured_hits == 0                    # untuned table
+    assert sum(v for k, v in s.as_dict().items()
+               if k in ("memory_hits", "disk_hits", "cold_builds")) \
+        == total_calls
+
+
+def test_frozen_read_path_safe_under_concurrent_freeze(tmp_path):
+    """Readers racing freeze()/unfreeze() republications never crash, never
+    see a torn plan, and always get the reference candidate."""
+    store = ArtifactStore(tmp_path)
+    compile_family(MATMUL, store, machines=[TPU_V5E],
+                   shapes=[dict(TRIPLES[0][1])])
+    cache = DispatchCache(store=store)
+    ref = {i: best_variant(t[0], TPU_V5E, t[1], use_cache=False)
+           for i, t in enumerate(TRIPLES)}
+    stop = threading.Event()
+
+    def freezer(_):
+        grow = []
+        while not stop.is_set():
+            for fam, data in TRIPLES:
+                grow.append((fam, TPU_V5E, data))
+                cache.freeze(list(grow))
+            cache.unfreeze()
+
+    def reader(i):
+        try:
+            for _ in range(ROUNDS * 4):
+                for j, (fam, data) in enumerate(TRIPLES):
+                    cand = cache.best_variant(fam, TPU_V5E, data)
+                    assert _candidate_bytes(cand) == _candidate_bytes(ref[j])
+                    fn = cache.warm_callable(fam, TPU_V5E,
+                                             tuple(data.items()), True)
+                    assert fn is not None
+        finally:
+            stop.set()
+
+    errors = []
+
+    def guarded(fn, i):
+        try:
+            fn(i)
+        except BaseException as e:                 # noqa: BLE001
+            errors.append(e)
+            stop.set()
+
+    threads = [threading.Thread(target=guarded, args=(freezer, 0))]
+    threads += [threading.Thread(target=guarded, args=(reader, i))
+                for i in range(N_THREADS - 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
