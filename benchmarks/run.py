@@ -12,9 +12,9 @@ the paper evaluates.  CSV columns: name,us_per_call,derived.
 ``--json`` writes every measured row as ``{"rows": [{name, us, derived}]}``
 (plus meta); ``scripts/check_bench.py`` compares that against the committed
 ``benchmarks/baseline.json`` and fails CI on a >2x regression of ANY gated
-row (cold/warm dispatch, fast-lane warm ops, serve decode, compile and
-tuning sweeps) — and, under ``--strict``, on any measured row missing from
-the baseline.
+row (cold/warm dispatch, fast-lane warm ops, serve decode, plan-backed
+start, compile and tuning sweeps) — and, under ``--strict``, on any
+measured row missing from the baseline.
 """
 from __future__ import annotations
 
@@ -285,6 +285,53 @@ def bench_serve_decode(quick=False):
              f"frozen={len(eng.kernel_plan)}picks")]
 
 
+def bench_plan_load(quick=False):
+    """Plan-backed serving start (load a shipped serve-plan artifact +
+    ``DispatchCache.freeze_resolved``) vs the online traced warm-up it
+    replaces — the number that justifies building plans offline and
+    shipping them to every host of a serving mesh.  The measured row is the
+    plan path; the derived column reports the online path and asserts the
+    plan-backed start performed ZERO cold resolutions with picks identical
+    to the online freeze (the acceptance properties of ISSUE 5)."""
+    from repro.artifacts.dispatch import (DispatchCache, get_default_cache,
+                                          set_default_cache)
+    from repro.configs import get_smoke_config
+    from repro.plans import PlanStore, build_serve_plan, warm_from_plan
+    from repro.runtime.serving import warm_kernel_dispatch
+    cfg = get_smoke_config("llama3_8b")
+    prior = get_default_cache()
+    try:
+        with tempfile.TemporaryDirectory() as tmp:
+            store = PlanStore(tmp)
+            plan, _ = build_serve_plan(cfg, max_len=128,
+                                       cache=DispatchCache())
+            store.save_plan(plan)
+            # online traced warm-up on a fresh cache (trees stay memoized
+            # process-wide, so this is the in-process re-warm cost, not the
+            # fresh-process cold number gated by dispatch_cold_matmul)
+            online_cache = DispatchCache()
+            set_default_cache(online_cache)
+            t0 = time.perf_counter()
+            online_picks = warm_kernel_dispatch(cfg, max_len=128,
+                                                plan_store=False)
+            online_us = (time.perf_counter() - t0) * 1e6
+            # plan-backed start on another fresh cache
+            plan_cache = DispatchCache()
+            t0 = time.perf_counter()
+            picks = warm_from_plan(cfg, max_len=128, store=store,
+                                   cache=plan_cache)
+            plan_us = (time.perf_counter() - t0) * 1e6
+    finally:
+        set_default_cache(prior)
+    assert picks is not None and plan_cache.stats.cold_builds == 0
+    assert {k: v["candidate"] for k, v in picks.items()} == \
+           {k: v["candidate"] for k, v in online_picks.items()}
+    return [("plan_load_smoke", plan_us,
+             f"online={online_us:.0f}us "
+             f"speedup={online_us / max(plan_us, 1e-9):.0f}x "
+             f"entries={len(picks)} cold=0")]
+
+
 def bench_tuning_sweep(quick=False):
     """The measure -> calibrate -> compact loop (scripts/tune_artifacts.py)
     end to end for one matmul bucket on interpreted Pallas — the cost of
@@ -364,6 +411,7 @@ BENCH_GROUPS = (
     ("dispatch_reference", bench_dispatch_reference),
     ("warm", bench_warm_dispatch),
     ("serve", bench_serve_decode),
+    ("plan", bench_plan_load),
     ("compile", bench_compile_sweep),
     ("tuning", bench_tuning_sweep),
     ("treebuild", lambda quick: bench_tree_build()),

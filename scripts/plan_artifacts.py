@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Build portable serve-plan artifacts offline: trace -> resolve -> ship.
+
+For each model config, traces the exact (family, machine, data) warm set its
+serve path will dispatch (``repro.plans.trace`` — Mamba configs include
+``ssd_scan``, MoE configs their router/expert projections, whisper the
+encoder shapes), resolves every triple through the dispatch tiers against
+the artifact dir (so compiled/tuned tables decide the picks), and writes a
+versioned serve-plan artifact next to the dispatch tables:
+
+    <out>/plans/<config>/serve-v<V>-<machine>.json
+
+Ship the whole artifact dir to the serving mesh; every host's
+``ServeEngine(warm_kernels=True)`` then starts from the plan with zero
+online tree enumeration (``DispatchCache.stats.cold_builds == 0``).
+
+    PYTHONPATH=src python scripts/plan_artifacts.py                # all archs
+    PYTHONPATH=src python scripts/plan_artifacts.py --config llama3_8b \
+        --machine tpu_v5e --out artifacts
+    PYTHONPATH=src python scripts/plan_artifacts.py --config llama3_8b \
+        --dry-run                                                  # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.artifacts import ArtifactStore, DispatchCache      # noqa: E402
+from repro.configs import ARCH_IDS, get_config, get_smoke_config  # noqa: E402
+from repro.core.params import MACHINES                         # noqa: E402
+from repro.plans import PlanStore, build_serve_plan, trace_warm_set  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--config", action="append", default=None,
+                    help="model config to plan (repeatable; module name or "
+                         "canonical id; default: every assigned arch)")
+    ap.add_argument("--machine", action="append", default=None,
+                    choices=sorted(MACHINES),
+                    help="target machine (repeatable; default tpu_v5e — "
+                         "the serving target)")
+    ap.add_argument("--out", default=None,
+                    help="artifact root (default: $REPRO_ARTIFACT_DIR "
+                         "or ./artifacts); dispatch tables found there "
+                         "decide the resolutions")
+    ap.add_argument("--max-len", type=int, default=512,
+                    help="serve window the warm set is traced for")
+    ap.add_argument("--include-train", action="store_true",
+                    help="also trace the train-step shapes into the plan")
+    ap.add_argument("--train-seq", type=int, default=4096)
+    ap.add_argument("--train-batch", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-scale dims)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print each config's traced warm set without "
+                         "resolving or writing anything (CI smoke)")
+    args = ap.parse_args(argv)
+
+    names = args.config if args.config else list(ARCH_IDS)
+    get = get_smoke_config if args.smoke else get_config
+    try:
+        cfgs = [get(n) for n in names]
+    except ModuleNotFoundError as e:
+        ap.error(f"unknown config {e.name!r}; have {sorted(ARCH_IDS)}")
+    machines = [MACHINES[m] for m in (args.machine or ["tpu_v5e"])]
+    trace_kw = dict(max_len=args.max_len, include_train=args.include_train,
+                    train_seq=args.train_seq, train_batch=args.train_batch)
+
+    if args.dry_run:
+        for cfg in cfgs:
+            traced = trace_warm_set(cfg, **trace_kw)
+            fams = collections.Counter(op.family for op in traced)
+            print(f"[dry-run] {cfg.name}: {len(traced)} traced triples "
+                  f"({', '.join(f'{f}x{n}' for f, n in sorted(fams.items()))})")
+            for op in traced:
+                print(f"           {op.label}  <- {', '.join(op.sites)}")
+        return 0
+
+    # one cache per machine sweep: tree/table memos amortize across configs;
+    # resolution prefers the dispatch tables under --out when they exist
+    plan_store = PlanStore(args.out)
+    failures = 0
+    for machine in machines:
+        cache = DispatchCache(store=ArtifactStore(args.out))
+        for cfg in cfgs:
+            t0 = time.perf_counter()
+            plan, dropped = build_serve_plan(cfg, machine=machine,
+                                             cache=cache, **trace_kw)
+            if not plan.entries:
+                print(f"[FAIL] {cfg.name}/{machine.name}: every traced "
+                      f"triple is infeasible", file=sys.stderr)
+                failures += 1
+                continue
+            path = plan_store.save_plan(plan)
+            sources = collections.Counter(e.rank_source
+                                          for e in plan.entries)
+            line = (f"[OK] {cfg.name}/{machine.name}: "
+                    f"{len(plan.entries)} entries "
+                    f"({', '.join(f'{s}={n}' for s, n in sorted(sources.items()))}) "
+                    f"digest={plan.digest()} "
+                    f"({time.perf_counter() - t0:.1f}s)\n"
+                    f"     -> {path}")
+            if dropped:
+                line += ("\n     dropped (infeasible at shape): "
+                         + ", ".join(op.label for op in dropped))
+            print(line, flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

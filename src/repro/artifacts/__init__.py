@@ -11,15 +11,16 @@
 """
 from .serde import FORMAT_VERSION, ArtifactFormatError
 from .store import ArtifactStore
-from .dispatch import (DispatchCache, DispatchStats, FrozenDispatchPlan,
-                       FrozenEntry, bucket_key, frozen_key,
-                       get_default_cache, set_default_cache)
+from .dispatch import (DispatchCache, DispatchRecord, DispatchStats,
+                       FrozenDispatchPlan, FrozenEntry, bucket_key,
+                       frozen_key, get_default_cache, set_default_cache)
 from .compile import (DEFAULT_DATA_GRIDS, build_dispatch_table, compile_all,
                       compile_family)
 
 __all__ = [
     "FORMAT_VERSION", "ArtifactFormatError", "ArtifactStore",
-    "DispatchCache", "DispatchStats", "FrozenDispatchPlan", "FrozenEntry",
+    "DispatchCache", "DispatchRecord", "DispatchStats", "FrozenDispatchPlan",
+    "FrozenEntry",
     "bucket_key", "frozen_key", "get_default_cache", "set_default_cache",
     "DEFAULT_DATA_GRIDS", "build_dispatch_table", "compile_all",
     "compile_family",

@@ -4,7 +4,9 @@
 through a frozen fast lane plus three tiers:
 
   0. **frozen plan** — an immutable snapshot built by :meth:`DispatchCache.
-     freeze` from warm-up triples (``warm_kernel_dispatch`` feeds it).  The
+     freeze` from warm-up triples (``warm_kernel_dispatch`` feeds it), or
+     pinned directly from a shipped serve-plan artifact via
+     :meth:`DispatchCache.freeze_resolved` (:mod:`repro.plans`).  The
      read path (:meth:`DispatchCache.warm_callable`) is a single GIL-atomic
      plain-dict lookup: no lock, no key re-sorting (canonical keys are
      ``frozenset`` item views; steady-state keys are learned call-site item
@@ -50,11 +52,12 @@ Invariants this module maintains (tests enforce them):
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import (Any, Callable, Dict, FrozenSet, Iterable, List, Mapping,
-                    Optional, Sequence, Tuple)
+from typing import (Any, Callable, Dict, FrozenSet, Iterable, Iterator, List,
+                    Mapping, Optional, Sequence, Tuple)
 
 from ..core.constraints import Verdict
 from ..core.params import MachineDescription
@@ -84,6 +87,19 @@ class FrozenEntry:
     candidate: Candidate
     source: str                            # "measured" | "symbolic" | "cold"
     fns: Tuple[Callable, Callable]         # (interpret=False, interpret=True)
+
+
+def _pin_entry(family: FamilySpec, cand: Candidate,
+               source: str) -> FrozenEntry:
+    """Build one frozen entry: the memoized (identity-stable) kernel
+    callables for both interpret modes.  Single-sourced so entries pinned
+    online (``freeze``) and from a shipped plan (``freeze_resolved``) can
+    never be constructed differently."""
+    fns = tuple(
+        family.instantiate(cand.plan, cand.assignment, interpret=interp,
+                           leaf_index=cand.leaf_index)
+        for interp in (False, True))
+    return FrozenEntry(candidate=cand, source=source, fns=fns)
 
 
 class FrozenDispatchPlan:
@@ -141,6 +157,44 @@ class FrozenDispatchPlan:
 
     def __len__(self) -> int:
         return len(self._entries)
+
+
+class DispatchRecord:
+    """Ordered, deduplicated log of dispatch requests seen while a
+    :meth:`DispatchCache.record` context is active.
+
+    Each request is normalized to ``(family_name, machine_name, sorted data
+    items)`` so the same triple reached through ``best_variant`` and through
+    an op wrapper's ``warm_callable`` items tuple records identically.
+    ``counts`` keeps the raw request multiplicity per triple.  Recording is
+    a tracing/observability mode (``repro.plans.trace`` drives model steps
+    through it): appends are plain GIL-atomic dict/list stores, adequate for
+    the single-threaded trace drivers, not a concurrency surface."""
+
+    __slots__ = ("requests", "counts")
+
+    def __init__(self) -> None:
+        self.requests: List[Tuple[str, str, Tuple[Tuple[str, int], ...]]] = []
+        self.counts: Dict[Tuple[str, str, Tuple[Tuple[str, int], ...]],
+                          int] = {}
+
+    def add(self, family_name: str, machine_name: str,
+            data: Mapping[str, int]) -> None:
+        key = (family_name, machine_name,
+               tuple(sorted((k, int(v)) for k, v in data.items())))
+        n = self.counts.get(key)
+        if n is None:
+            self.requests.append(key)
+            self.counts[key] = 1
+        else:
+            self.counts[key] = n + 1
+
+    def triples(self) -> List[Tuple[str, str, Dict[str, int]]]:
+        """The recorded warm set, first-request order, one row per triple."""
+        return [(f, m, dict(items)) for f, m, items in self.requests]
+
+    def __len__(self) -> int:
+        return len(self.requests)
 
 
 def bucket_key(data: Mapping[str, int]) -> str:
@@ -211,6 +265,8 @@ class DispatchCache:
                                           Dict[int, Leaf]]]] = {}
         self._trees: Dict[str, Optional[List[Leaf]]] = {}
         self._lock = threading.Lock()
+        # recording mode (see record()): None except while a trace is active
+        self._recorder: Optional[DispatchRecord] = None
         # fast lane: swapped atomically by freeze(), read without the lock
         self.frozen_plan: Optional[FrozenDispatchPlan] = None
         # bumped by unfreeze()/clear(); attach_store's re-freeze aborts if
@@ -231,6 +287,9 @@ class DispatchCache:
         offline ranking), or ``"cold"`` (tier-3 rebuild).  A memory hit
         returns the source recorded when the triple was first resolved, so
         attribution is race-free under concurrent callers."""
+        rec = self._recorder
+        if rec is not None:
+            rec.add(family.name, machine.name, data)
         frozen = self.frozen_plan                 # snapshot: freeze() swaps whole
         if frozen is not None:
             ent = frozen.get(family.name, machine.name, data)
@@ -336,18 +395,47 @@ class DispatchCache:
         new_triples: Dict[FrozenKey, Tuple[Any, Any, Mapping[str, int]]] = {}
         for family, machine, data in triples:
             cand, source = self._resolve_tiers(family, machine, data)
-            fns = tuple(
-                family.instantiate(cand.plan, cand.assignment,
-                                   interpret=interp,
-                                   leaf_index=cand.leaf_index)
-                for interp in (False, True))
             key = frozen_key(family.name, machine.name, data)
-            resolved[key] = FrozenEntry(candidate=cand, source=source,
-                                        fns=fns)
+            resolved[key] = _pin_entry(family, cand, source)
             new_triples[key] = (family, machine, data)
+        return self._publish_frozen(resolved, new_triples,
+                                    _expect_unfreeze_gen)
+
+    def freeze_resolved(self, entries: Iterable[
+            Tuple[FamilySpec, MachineDescription, Mapping[str, int],
+                  Candidate, str]],
+            *, _expect_unfreeze_gen: Optional[int] = None
+            ) -> Optional[FrozenDispatchPlan]:
+        """Pin *externally resolved* triples into the fast lane.
+
+        Each entry carries its own :class:`Candidate` and deciding source, so
+        no tier is consulted and no tree is enumerated — this is how a
+        shipped serve-plan artifact (:mod:`repro.plans`) starts a process
+        with ``stats.cold_builds == 0``.  The kernel callables still come
+        from the family's memoized ``instantiate`` (identity-stable), and
+        publication merges over any existing plan exactly like
+        :meth:`freeze`.  The triples are remembered, so a later
+        ``attach_store`` re-freeze re-resolves them through the (new) tiers
+        — plan-fed picks are re-pinned against fresh tables, not kept
+        authoritative forever."""
+        resolved: Dict[FrozenKey, FrozenEntry] = {}
+        new_triples: Dict[FrozenKey, Tuple[Any, Any, Mapping[str, int]]] = {}
+        for family, machine, data, cand, source in entries:
+            key = frozen_key(family.name, machine.name, data)
+            resolved[key] = _pin_entry(family, cand, source)
+            new_triples[key] = (family, machine, data)
+        return self._publish_frozen(resolved, new_triples,
+                                    _expect_unfreeze_gen)
+
+    def _publish_frozen(self, resolved: Dict[FrozenKey, FrozenEntry],
+                        new_triples: Dict[FrozenKey, Tuple[Any, Any,
+                                                           Mapping[str, int]]],
+                        expect_unfreeze_gen: Optional[int]
+                        ) -> Optional[FrozenDispatchPlan]:
+        """Shared merge-and-swap tail of freeze/freeze_resolved."""
         with self._lock:
-            if (_expect_unfreeze_gen is not None
-                    and self._unfreeze_gen != _expect_unfreeze_gen):
+            if (expect_unfreeze_gen is not None
+                    and self._unfreeze_gen != expect_unfreeze_gen):
                 return self.frozen_plan       # a concurrent unfreeze won
             old = self.frozen_plan
             merged = old.entries() if old is not None else {}
@@ -359,6 +447,26 @@ class DispatchCache:
             plan = FrozenDispatchPlan(merged, tuple(all_triples.values()))
             self.frozen_plan = plan
         return plan
+
+    # -- recording mode (warm-set tracing) -----------------------------------
+    @contextlib.contextmanager
+    def record(self) -> Iterator[DispatchRecord]:
+        """Record every dispatch request while the context is active.
+
+        The counted entry points are ``best_variant``/
+        ``best_variant_with_source`` (and everything routed through them,
+        e.g. ``core.select.best_variant``) and the ops-layer
+        ``warm_callable`` — i.e. exactly the requests a model step issues.
+        :mod:`repro.plans.trace` drives abstract prefill/decode/train steps
+        under this context to derive a config's true warm set.  Contexts do
+        not nest usefully (the innermost recorder wins and is restored on
+        exit); recording costs the hot path one attribute test when off."""
+        rec = DispatchRecord()
+        prev, self._recorder = self._recorder, rec
+        try:
+            yield rec
+        finally:
+            self._recorder = prev
 
     def unfreeze(self) -> None:
         """Drop the frozen plan; the locked tiers keep serving.
@@ -405,6 +513,9 @@ class DispatchCache:
 
         ``items`` is the data mapping as an items tuple (any order); the
         first call from a given site teaches the plan its ordering."""
+        rec = self._recorder                  # one load+test when not tracing
+        if rec is not None:
+            rec.add(family.name, machine.name, dict(items))
         frozen = self.frozen_plan
         if frozen is not None:
             fn = frozen._fns.get((family, machine.name, items, interpret))

@@ -27,6 +27,33 @@ _ENV_ROOT = "REPRO_ARTIFACT_DIR"
 _DEFAULT_ROOT = "artifacts"
 
 
+def atomic_write_text(path: Path, text: str) -> Path:
+    """Write via mkstemp + rename so a concurrent reader never sees a torn
+    artifact (shared by every artifact store, incl. repro.plans)."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return path
+
+
+def read_json_dict(path: Path) -> Optional[Dict[str, Any]]:
+    """Forgiving read: a missing file, unreadable JSON, or a non-dict
+    payload returns ``None`` (cache miss), never raises."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return None
+    return payload if isinstance(payload, dict) else None
+
+
 class ArtifactStore:
     def __init__(self, root: str | os.PathLike | None = None):
         self.root = Path(root or os.environ.get(_ENV_ROOT, _DEFAULT_ROOT))
@@ -44,27 +71,11 @@ class ArtifactStore:
 
     # -- low-level IO --------------------------------------------------------
     def _write(self, path: Path, payload: Mapping[str, Any]) -> Path:
-        path.parent.mkdir(parents=True, exist_ok=True)
-        text = serde.dumps(payload)
-        # atomic replace: a concurrent reader never sees a torn artifact
-        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                f.write(text)
-            os.replace(tmp, path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
-        return path
+        return atomic_write_text(path, serde.dumps(payload))
 
     def _read(self, path: Path) -> Optional[Dict[str, Any]]:
-        try:
-            with open(path) as f:
-                payload = json.load(f)
-        except (OSError, ValueError):
-            return None
-        if not isinstance(payload, dict):
+        payload = read_json_dict(path)
+        if payload is None:
             return None
         if payload.get("format") != serde.FORMAT_VERSION:
             return None                      # version mismatch == cache miss

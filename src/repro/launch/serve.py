@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import init_model
+from repro.plans import PlanStore
 from repro.runtime import ServeEngine
 
 
@@ -27,7 +28,13 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--warm-kernels", action="store_true",
                     help="pre-resolve kernel-variant dispatch at engine "
-                         "start (uses compiled artifacts when present)")
+                         "start (uses a shipped serve-plan artifact when "
+                         "one matches, else compiled artifacts/online "
+                         "warm-up)")
+    ap.add_argument("--plan-dir", default=None,
+                    help="artifact root holding serve-plan artifacts "
+                         "(scripts/plan_artifacts.py output; default: "
+                         "$REPRO_ARTIFACT_DIR or ./artifacts)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -35,8 +42,10 @@ def main() -> None:
         raise SystemExit("enc-dec serving demo not wired for CLI; "
                          "see tests/test_serving.py")
     params, _ = init_model(jax.random.PRNGKey(args.seed), cfg)
+    plan_store = PlanStore(args.plan_dir) if args.plan_dir else None
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
-                      max_len=args.max_len, warm_kernels=args.warm_kernels)
+                      max_len=args.max_len, warm_kernels=args.warm_kernels,
+                      plan_store=plan_store)
     if eng.kernel_plan:
         for name, info in eng.kernel_plan.items():
             print(f"kernel {name} [{info['rank_source']}]: "

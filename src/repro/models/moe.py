@@ -40,6 +40,11 @@ def _norm_init(key, shape, dtype=jnp.float32):
 # production mesh device counts the a2a layout must divide into
 _A2A_PAD_TO = 512
 
+#: Default token-group size for the grouped dispatch.  Shared with
+#: repro.plans.trace, which derives the capacity-width expert-matmul shapes
+#: a config's serve path will dispatch — keep them from drifting apart.
+MOE_GROUP_SIZE = 1024
+
 
 def a2a_padded_experts(cfg: ModelConfig) -> int:
     """Stored expert count under the 'moe_a2a' flag.
@@ -83,7 +88,8 @@ def capacity(group_size: int, num_experts: int, top_k: int,
 
 
 def moe_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
-              group_size: int = 1024) -> Tuple[jax.Array, jax.Array]:
+              group_size: int = MOE_GROUP_SIZE
+              ) -> Tuple[jax.Array, jax.Array]:
     """Returns (output (B,S,d), aux_load_balance_loss scalar)."""
     m = cfg.moe
     B, S, d = x.shape

@@ -1,0 +1,36 @@
+"""Traced warm-sets + portable serve-plan artifacts.
+
+Closes the deployment side of the paper's offline/online split: instead of
+every serving process re-deriving (or hand-listing) the kernel-variant warm
+set, the exact ``(family, machine, data)`` set a :class:`ModelConfig` will
+dispatch is *traced* from the model structure once, resolved offline
+against the compiled/tuned dispatch tables, and shipped as a versioned
+**serve-plan artifact** next to those tables.  At engine start the plan is
+fed straight to ``DispatchCache.freeze_resolved`` — zero online tree
+enumeration, ``stats.cold_builds == 0``.
+
+- :mod:`repro.plans.trace`  — abstract prefill/decode/train step drivers +
+  the ``DispatchCache.record`` replay (the warm-set derivation)
+- :mod:`repro.plans.serde`  — ``PLAN_FORMAT_VERSION``-stamped,
+  byte-deterministic payloads (version-mismatch-reads-as-miss)
+- :mod:`repro.plans.store`  — ``<root>/plans/<config>/serve-v<V>-<machine>
+  .json`` next to the dispatch artifacts
+- :mod:`repro.plans.loader` — offline ``build_serve_plan``; online
+  ``warm_from_plan`` (load, validate, freeze)
+
+Workflow: ``scripts/compile_artifacts.py`` → ``scripts/tune_artifacts.py``
+→ ``scripts/plan_artifacts.py`` → ship the artifact dir (docs/tuning.md).
+"""
+from .serde import PLAN_FORMAT_VERSION, PlanEntry, ServePlan
+from .store import PlanStore, resolve_env_store
+from .trace import TracedOp, op_label, record_warm_set, trace_warm_set
+from .loader import (apply_serve_plan, build_serve_plan, load_serve_plan,
+                     warm_from_plan)
+
+__all__ = [
+    "PLAN_FORMAT_VERSION", "PlanEntry", "ServePlan",
+    "PlanStore", "resolve_env_store",
+    "TracedOp", "op_label", "record_warm_set", "trace_warm_set",
+    "apply_serve_plan", "build_serve_plan", "load_serve_plan",
+    "warm_from_plan",
+]

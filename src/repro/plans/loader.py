@@ -1,0 +1,147 @@
+"""Build, load, and apply serve-plan artifacts.
+
+Offline (``scripts/plan_artifacts.py``):
+
+    ``build_serve_plan`` — trace the config's warm set, resolve every triple
+    through the dispatch tiers (ideally against compiled/tuned tables), and
+    package the resolutions as a :class:`ServePlan`.
+
+Online (``ServeEngine`` / ``repro.launch.serve`` at startup):
+
+    ``warm_from_plan`` — load the artifact for (config, machine), validate
+    it against the *current* machine bindings and requested trace params,
+    and feed it straight to ``DispatchCache.freeze_resolved``: the fast
+    lane is pinned without touching a single tier, so
+    ``stats.cold_builds == 0`` on a plan-backed start.  Any mismatch —
+    missing file, format version, different machine bindings, different
+    ``max_len``, unknown family, uninstantiable candidate — returns ``None``
+    and the caller falls back to online warm-up (cache-miss-never-error,
+    the PR 1 artifact policy).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..artifacts.dispatch import DispatchCache, get_default_cache
+from ..core.params import MachineDescription, TPU_V5E
+from ..models.config import ModelConfig
+from .serde import PlanEntry, ServePlan
+from .store import PlanStore, resolve_env_store
+from .trace import TracedOp, trace_warm_set
+
+
+# ---------------------------------------------------------------------------
+# Offline: build
+# ---------------------------------------------------------------------------
+
+def build_serve_plan(cfg: ModelConfig, *,
+                     machine: MachineDescription = TPU_V5E,
+                     max_len: int = 512, include_train: bool = False,
+                     train_seq: int = 4096, train_batch: int = 8,
+                     cache: Optional[DispatchCache] = None
+                     ) -> Tuple[ServePlan, List[TracedOp]]:
+    """Trace + resolve one config's warm set into a shippable plan.
+
+    Resolution goes through the given cache's normal tiers, so building
+    against a store holding compiled/tuned dispatch tables bakes their
+    (measured) ranking into the plan — the ``rank_source`` per entry records
+    exactly that.  Triples with no feasible leaf at their shape are dropped
+    from the plan and returned separately for reporting."""
+    from ..kernels.ops import FAMILIES
+    cache = cache if cache is not None else get_default_cache()
+    traced = trace_warm_set(cfg, max_len=max_len,
+                            include_train=include_train,
+                            train_seq=train_seq, train_batch=train_batch)
+    entries: List[PlanEntry] = []
+    dropped: List[TracedOp] = []
+    for op in traced:
+        try:
+            cand, source = cache.best_variant_with_source(
+                FAMILIES[op.family], machine, op.data_dict())
+        except ValueError:
+            dropped.append(op)               # infeasible at this shape
+            continue
+        entries.append(PlanEntry(label=op.label, family=op.family,
+                                 data=op.data, sites=op.sites,
+                                 candidate=cand, rank_source=source))
+    plan = ServePlan(config=cfg.name, machine=machine.name,
+                     machine_bindings=dict(machine.bindings()),
+                     max_len=max_len, include_train=include_train,
+                     entries=tuple(entries))
+    return plan, dropped
+
+
+# ---------------------------------------------------------------------------
+# Online: load + apply
+# ---------------------------------------------------------------------------
+
+def load_serve_plan(cfg: ModelConfig, *,
+                    machine: MachineDescription = TPU_V5E,
+                    store: Optional[PlanStore] = None,
+                    max_len: Optional[int] = None
+                    ) -> Optional[ServePlan]:
+    """Load + validate the plan for (config, machine); ``None`` on any miss.
+
+    Validation beyond the store's own format check: the plan must name this
+    config, carry the current machine *bindings* (a renamed or re-specced
+    host reads as a miss, like stale dispatch tables), and — when
+    ``max_len`` is given — have been traced for the same serve window."""
+    store = store if store is not None else resolve_env_store()
+    if store is None:
+        return None
+    plan = store.load_plan(cfg.name, machine.name)
+    if plan is None:
+        return None
+    if plan.config != cfg.name:
+        return None
+    if plan.machine_bindings != machine.bindings():
+        return None
+    if max_len is not None and plan.max_len != int(max_len):
+        return None
+    return plan
+
+
+def apply_serve_plan(plan: ServePlan, *,
+                     machine: MachineDescription = TPU_V5E,
+                     cache: Optional[DispatchCache] = None
+                     ) -> Optional[Dict[str, Any]]:
+    """Pin a loaded plan into the cache's frozen fast lane.
+
+    Feeds every entry to ``DispatchCache.freeze_resolved`` — no tier is
+    consulted, no tree enumerated.  Returns the same
+    ``{label: {"candidate", "rank_source"}}`` report online warm-up
+    produces, or ``None`` when the plan references an unknown kernel family
+    or a candidate that fails to instantiate (mangled assignment) — nothing
+    is published in that case, so a bad artifact degrades to online warm-up
+    with the cache untouched."""
+    from ..kernels.ops import FAMILIES
+    cache = cache if cache is not None else get_default_cache()
+    resolved = []
+    for e in plan.entries:
+        family = FAMILIES.get(e.family)
+        if family is None:
+            return None
+        resolved.append((family, machine, e.data_dict(), e.candidate,
+                         e.rank_source))
+    try:
+        cache.freeze_resolved(resolved)
+    except (AttributeError, KeyError, TypeError, ValueError):
+        return None                          # uninstantiable candidate
+    return {e.label: {"candidate": e.candidate,
+                      "rank_source": e.rank_source}
+            for e in plan.entries}
+
+
+def warm_from_plan(cfg: ModelConfig, *,
+                   machine: MachineDescription = TPU_V5E,
+                   max_len: int = 512,
+                   store: Optional[PlanStore] = None,
+                   cache: Optional[DispatchCache] = None
+                   ) -> Optional[Dict[str, Any]]:
+    """The plan-backed warm-up: load, validate, freeze.  ``None`` on any
+    miss — the caller (``warm_kernel_dispatch``) falls back online."""
+    plan = load_serve_plan(cfg, machine=machine, store=store,
+                           max_len=max_len)
+    if plan is None or not plan.entries:
+        return None
+    return apply_serve_plan(plan, machine=machine, cache=cache)

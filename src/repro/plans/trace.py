@@ -1,0 +1,234 @@
+"""Trace the exact kernel warm set a :class:`ModelConfig` will dispatch.
+
+PR 4's ``warm_kernel_dispatch`` warmed a *hand-listed* triple set (flash
+attention plus three matmuls) — silently missing ``ssd_scan`` for Mamba/
+hybrid configs, the MoE router/expert projections, the whisper encoder
+shapes, and every SSM projection.  This module derives the warm set from the
+config itself: abstract step drivers walk the model structure exactly as
+:mod:`repro.models.transformer` assembles it (prefill/decode serve steps,
+optionally the train step) and emit one dispatch request per kernel-family
+op the step would perform, with the data parameters computed from the config
+dims.  Nothing is executed — the drivers are an abstract interpretation of
+the step over shapes.
+
+Two consumption modes:
+
+- :func:`trace_warm_set` — pure derivation: the ordered, deduplicated
+  :class:`TracedOp` list (no cache touched, no resolution paid).
+- :func:`record_warm_set` — replay the same requests through the live
+  dispatch layer (``DispatchCache.best_variant`` under
+  :meth:`DispatchCache.record`), returning what the cache actually saw.
+  This is the fidelity check — traced and recorded sets must agree — and it
+  warms the LRU as a side effect, which is what serving warm-up wants.
+
+Width conventions (why some real ops are deliberately untraced): the
+blocked kernel families only engage at tile scale — a shape with
+``M·N < SUBLANE·LANE`` (1024 on v5e) has no feasible leaf, so decode-pool
+GEMV work (``M = batch``) is *not* traced; projections are traced at the
+token-parallel prefill width (``M = max_len``), matching what the paper's
+blocked kernels actually serve.  Attention/SSD cores are traced at both the
+prefill window and ``2·max_len`` (the decode-context guard band the legacy
+hand list established).  A traced triple may still be infeasible for an
+extreme config (e.g. a tiny MoE router at short ``max_len``); resolution-
+time consumers drop those (``build_serve_plan``/``warm_kernel_dispatch``),
+trace itself stays an honest statement of what the model would ask for.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from ..core.params import MachineDescription, TPU_V5E
+from ..models.config import ModelConfig
+from ..models.moe import MOE_GROUP_SIZE, capacity
+
+
+def op_label(family: str, data: Dict[str, int]) -> str:
+    """Canonical label for a traced (family, data) pair, e.g.
+    ``matmul@K4096xM512xN14336`` — unique per triple, stable across runs."""
+    return family + "@" + "x".join(f"{k}{int(v)}"
+                                   for k, v in sorted(data.items()))
+
+
+@dataclass(frozen=True)
+class TracedOp:
+    """One deduplicated warm-set member: a (family, data) pair plus every
+    abstract call site that requested it (e.g. both MLP up- and gate-
+    projections share one matmul triple)."""
+
+    label: str
+    family: str
+    data: Tuple[Tuple[str, int], ...]        # sorted items, hashable
+    sites: Tuple[str, ...]
+
+    def data_dict(self) -> Dict[str, int]:
+        return dict(self.data)
+
+
+# ---------------------------------------------------------------------------
+# Abstract step drivers
+# ---------------------------------------------------------------------------
+
+def _iter_requests(cfg: ModelConfig, *, max_len: int,
+                   include_train: bool, train_seq: int, train_batch: int
+                   ) -> Iterator[Tuple[str, str, Dict[str, int]]]:
+    """Yield ``(site, family, data)`` per abstract kernel op, serve steps
+    first, then (optionally) the train step.  Mirrors the block families of
+    ``models.transformer.block_apply``."""
+    yield from _step_requests(cfg, tokens=max_len, prefix="serve",
+                              decode_guard=True)
+    if include_train:
+        yield from _step_requests(cfg, tokens=train_batch * train_seq,
+                                  seq=train_seq, prefix="train",
+                                  decode_guard=False)
+
+
+def _step_requests(cfg: ModelConfig, *, tokens: int, prefix: str,
+                   decode_guard: bool, seq: Optional[int] = None
+                   ) -> Iterator[Tuple[str, str, Dict[str, int]]]:
+    """One step's ops.  ``tokens`` is the token-parallel matmul width M;
+    ``seq`` the attention/scan sequence length (defaults to ``tokens``).
+    ``decode_guard`` additionally traces the cores at ``2·seq`` — the
+    growing-context shapes the decode loop reaches after prefill."""
+    d, hd = cfg.d_model, cfg.hd
+    seq = seq if seq is not None else tokens
+    has_attn = cfg.block in ("attn_mlp", "attn_moe", "hybrid")
+    has_ssm = cfg.block in ("ssm", "hybrid")
+    has_mlp = cfg.block in ("attn_mlp", "hybrid") or (
+        cfg.block == "ssm" and cfg.d_ff > 0)
+    core_seqs = (seq, 2 * seq) if decode_guard else (seq,)
+
+    if has_attn:
+        for sq in core_seqs:
+            yield (f"{prefix}.attn.core@{sq}", "flash_attention",
+                   {"SQ": sq, "HD": hd})
+        yield (f"{prefix}.attn.q_proj", "matmul",
+               {"M": tokens, "N": cfg.heads * hd, "K": d})
+        yield (f"{prefix}.attn.kv_proj", "matmul",
+               {"M": tokens, "N": cfg.kv_heads * hd, "K": d})
+        yield (f"{prefix}.attn.out_proj", "matmul",
+               {"M": tokens, "N": d, "K": cfg.heads * hd})
+    if has_ssm and cfg.ssm is not None:
+        s = cfg.ssm
+        di = s.heads * s.head_dim
+        for sq in core_seqs:
+            yield (f"{prefix}.ssm.core@{sq}", "ssd_scan",
+                   {"SQ": sq, "HD": s.head_dim, "STATE": s.state})
+        yield (f"{prefix}.ssm.x_proj", "matmul",
+               {"M": tokens, "N": di, "K": d})
+        yield (f"{prefix}.ssm.bc_proj", "matmul",
+               {"M": tokens, "N": s.state, "K": d})
+        yield (f"{prefix}.ssm.out_proj", "matmul",
+               {"M": tokens, "N": d, "K": di})
+    if has_mlp:
+        f = cfg.d_ff or 4 * d
+        yield (f"{prefix}.mlp.up_proj", "matmul",
+               {"M": tokens, "N": f, "K": d})       # wi and wg share it
+        yield (f"{prefix}.mlp.down_proj", "matmul",
+               {"M": tokens, "N": d, "K": f})
+    if cfg.block == "attn_moe" and cfg.moe is not None:
+        m = cfg.moe
+        yield (f"{prefix}.moe.router", "matmul",
+               {"M": tokens, "N": m.num_experts, "K": d})
+        # per-expert token count: GShard capacity per group x group count
+        gsz = min(MOE_GROUP_SIZE, tokens)
+        groups = -(-tokens // gsz)
+        cap = groups * capacity(gsz, m.num_experts, m.top_k,
+                                m.capacity_factor)
+        yield (f"{prefix}.moe.expert_up", "matmul",
+               {"M": cap, "N": m.d_ff_expert, "K": d})
+        yield (f"{prefix}.moe.expert_down", "matmul",
+               {"M": cap, "N": d, "K": m.d_ff_expert})
+    if cfg.encoder is not None:
+        enc = cfg.encoder
+        # encoder self-attention and decoder cross-attention both attend
+        # over the fixed frame axis; decode-side growth tracked above
+        yield (f"{prefix}.encoder.attn.core", "flash_attention",
+               {"SQ": enc.seq_len, "HD": hd})
+        # encoder blocks are full attention blocks (transformer.init_layer
+        # with cross=False), so their projections run at the frame width;
+        # the decoder's cross-attention K/V projections over the encoder
+        # output share the kv_proj triple, and its q projection runs at
+        # decoder width (deduped against the self-attention q_proj above)
+        yield (f"{prefix}.encoder.attn.q_proj", "matmul",
+               {"M": enc.seq_len, "N": cfg.heads * hd, "K": d})
+        yield (f"{prefix}.encoder.attn.kv_proj", "matmul",
+               {"M": enc.seq_len, "N": cfg.kv_heads * hd, "K": d})
+        yield (f"{prefix}.encoder.attn.out_proj", "matmul",
+               {"M": enc.seq_len, "N": d, "K": cfg.heads * hd})
+        yield (f"{prefix}.encoder.mlp.up_proj", "matmul",
+               {"M": enc.seq_len, "N": cfg.d_ff or 4 * d, "K": d})
+        yield (f"{prefix}.encoder.mlp.down_proj", "matmul",
+               {"M": enc.seq_len, "N": d, "K": cfg.d_ff or 4 * d})
+    yield (f"{prefix}.lm_head", "matmul",
+           {"M": tokens, "N": cfg.vocab, "K": d})
+
+
+def trace_warm_set(cfg: ModelConfig, *, max_len: int = 512,
+                   include_train: bool = False, train_seq: int = 4096,
+                   train_batch: int = 8) -> List[TracedOp]:
+    """The config's warm set: ordered, deduplicated by (family, data).
+
+    Pure derivation — no dispatch cache is touched and nothing resolves, so
+    this is cheap enough to call on every engine start.  Deterministic: the
+    same (config, max_len, train flags) always yields the same list in the
+    same order (serve-plan artifacts are byte-stable because of it)."""
+    out: List[TracedOp] = []
+    index: Dict[Tuple[str, Tuple[Tuple[str, int], ...]], int] = {}
+    for site, family, data in _iter_requests(
+            cfg, max_len=max_len, include_train=include_train,
+            train_seq=train_seq, train_batch=train_batch):
+        items = tuple(sorted((k, int(v)) for k, v in data.items()))
+        key = (family, items)
+        at = index.get(key)
+        if at is None:
+            index[key] = len(out)
+            out.append(TracedOp(label=op_label(family, data), family=family,
+                                data=items, sites=(site,)))
+        else:
+            prev = out[at]
+            out[at] = TracedOp(label=prev.label, family=prev.family,
+                               data=prev.data, sites=prev.sites + (site,))
+    return out
+
+
+def record_warm_set(cfg: ModelConfig, *,
+                    machine: MachineDescription = TPU_V5E,
+                    cache=None, max_len: int = 512,
+                    include_train: bool = False, train_seq: int = 4096,
+                    train_batch: int = 8) -> List[TracedOp]:
+    """Drive the traced requests through the live dispatch layer and return
+    what its recording mode captured.
+
+    Every request goes through ``DispatchCache.best_variant`` under
+    :meth:`DispatchCache.record` — the same entry point serving resolution
+    uses — so the returned set is literally the recorded dispatch-request
+    log (first-request order), re-labelled through :func:`op_label`.
+    Infeasible triples (no feasible leaf at that shape) are recorded but
+    dropped from the result, mirroring what warm-up can actually pin.
+    Side effect: each feasible triple is resolved, warming the cache LRU."""
+    from ..artifacts.dispatch import get_default_cache
+    from ..kernels.ops import FAMILIES
+    cache = cache if cache is not None else get_default_cache()
+    traced = trace_warm_set(cfg, max_len=max_len,
+                            include_train=include_train,
+                            train_seq=train_seq, train_batch=train_batch)
+    feasible: Dict[Tuple[str, Tuple[Tuple[str, int], ...]], bool] = {}
+    with cache.record() as rec:
+        for op in traced:
+            try:
+                cache.best_variant(FAMILIES[op.family], machine,
+                                   op.data_dict())
+            except ValueError:
+                feasible[(op.family, op.data)] = False
+            else:
+                feasible[(op.family, op.data)] = True
+    sites = {(op.family, op.data): op.sites for op in traced}
+    out = []
+    for fname, _, data in rec.triples():
+        items = tuple(sorted(data.items()))
+        if not feasible.get((fname, items), False):
+            continue
+        out.append(TracedOp(label=op_label(fname, data), family=fname,
+                            data=items, sites=sites.get((fname, items), ())))
+    return out

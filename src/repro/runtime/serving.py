@@ -33,64 +33,74 @@ PyTree = Any
 def warm_kernel_dispatch(cfg: ModelConfig, *,
                          machine: MachineDescription = TPU_V5E,
                          max_len: int = 512,
-                         freeze: bool = True) -> Dict[str, Any]:
+                         freeze: bool = True,
+                         plan_store: Any = None) -> Dict[str, Any]:
     """Pre-resolve the kernel variants this model's serve path will ask for.
 
-    Serving traffic hits the same (family, machine, shape) triples millions
-    of times; resolving them once at engine start — ideally from the disk
-    artifacts compiled by ``scripts/compile_artifacts.py`` — keeps every
-    later ``select`` call an LRU hit, so no request ever pays for tree
-    enumeration.  With ``freeze=True`` (default) the resolved triples are
-    additionally snapshotted into the process cache's *frozen dispatch
-    plan* (:meth:`DispatchCache.freeze`): the steady-state read path then
-    takes no lock, re-sorts no keys, and returns the pre-instantiated
-    kernel callable — the warm-path fast lane serving decode rides.
+    Thin wrapper over :mod:`repro.plans`: the warm set is no longer a hand
+    list but the config's *traced* dispatch set
+    (:func:`repro.plans.trace.trace_warm_set` — so Mamba/hybrid configs warm
+    ``ssd_scan``, MoE configs warm their router/expert projections, whisper
+    warms the encoder shapes).  Two paths:
 
-    Returns ``{description: {"candidate": Candidate, "rank_source": str}}``
-    where ``rank_source`` reports whether the pick was decided by a
-    *measured* (tuned — see ``scripts/tune_artifacts.py``) ranking, the
-    *symbolic* precompiled ranking, or a *cold* rebuild: the
-    calibrated-vs-symbolic observability hook for serving start-up logs.
-    Attribution comes from the resolution itself
-    (:meth:`DispatchCache.best_variant_with_source`): the source is recorded
-    alongside the candidate when a triple is first resolved, so a tuned
-    bucket whose shortlist fails exact-shape revalidation correctly reports
-    ``cold``, memory hits report the tier that originally decided them, and
-    concurrent dispatches on the shared cache cannot skew the label.
+    - **plan-backed** (preferred): with ``freeze=True``, a serve-plan
+      artifact built offline by ``scripts/plan_artifacts.py`` — looked up in
+      ``plan_store`` (a :class:`repro.plans.PlanStore`), or the
+      ``REPRO_ARTIFACT_DIR``-resolved store when ``plan_store`` is ``None``
+      — is fed straight to :meth:`DispatchCache.freeze_resolved`.  Zero
+      online tree enumeration; ``stats.cold_builds`` stays 0.  Pass
+      ``plan_store=False`` to skip the artifact probe.
+    - **online fallback**: trace, resolve every triple through the tiers
+      (triples infeasible at this config's shapes are dropped), and — with
+      ``freeze=True`` (default) — snapshot them into the process cache's
+      frozen dispatch plan (:meth:`DispatchCache.freeze`): the steady-state
+      read path then takes no lock, re-sorts no keys, and returns the
+      pre-instantiated kernel callable.
+
+    Returns ``{label: {"candidate": Candidate, "rank_source": str}}`` where
+    ``label`` is the traced op label (``family@<sorted dims>``) and
+    ``rank_source`` reports whether the pick was decided by a *measured*
+    (tuned — see ``scripts/tune_artifacts.py``) ranking, the *symbolic*
+    precompiled ranking, or a *cold* rebuild: the calibrated-vs-symbolic
+    observability hook for serving start-up logs.  Attribution comes from
+    the resolution itself (:meth:`DispatchCache.best_variant_with_source`),
+    or — plan-backed — from the resolution recorded at plan-build time.
     """
     from ..artifacts.dispatch import get_default_cache
     from ..kernels.ops import FAMILIES
+    from ..plans.loader import warm_from_plan
+    from ..plans.trace import trace_warm_set
     cache = get_default_cache()
+
+    if freeze and plan_store is not False:
+        picks = warm_from_plan(cfg, machine=machine, max_len=max_len,
+                               store=plan_store or None, cache=cache)
+        if picks is not None:
+            return picks
+
     wanted: List[Any] = []
-
-    def want(label: str, family_name: str, data: Dict[str, int]) -> None:
-        wanted.append((label, family_name, data))
-
-    d, hd = cfg.d_model, cfg.hd
-    for sq in {max_len, 2 * max_len}:
-        want(f"flash_attention@SQ{sq}", "flash_attention",
-             {"SQ": sq, "HD": hd})
-    for m, n, k in ((max_len, cfg.d_ff or 4 * d, d),     # MLP up-projection
-                    (max_len, d, cfg.d_ff or 4 * d),     # MLP down-projection
-                    (max_len, cfg.heads * hd, d)):       # QKV projection
-        want(f"matmul@{m}x{n}x{k}", "matmul", {"M": m, "N": n, "K": k})
-
     picks: Dict[str, Any] = {}
+    for op in trace_warm_set(cfg, max_len=max_len):
+        fam, data = FAMILIES[op.family], op.data_dict()
+        try:
+            # feasibility probe (and the full resolution when not freezing;
+            # under freeze the snapshot below re-resolves via the warm LRU)
+            cand, source = cache.best_variant_with_source(fam, machine, data)
+        except ValueError:
+            continue                        # no feasible leaf at this shape
+        wanted.append((op.label, op.family, fam, data))
+        if not freeze:
+            picks[op.label] = {"candidate": cand, "rank_source": source}
     if freeze:
         # freeze resolves through the locked tiers (never the old frozen
         # plan), so a re-warm-up after compiling/tuning artifacts reports
         # and pins FRESH resolutions; picks come from the published plan
-        plan = cache.freeze([(FAMILIES[f], machine, data)
-                             for _, f, data in wanted])
-        for label, fname, data in wanted:
+        plan = cache.freeze([(fam, machine, data)
+                             for _, _, fam, data in wanted])
+        for label, fname, _, data in wanted:
             ent = plan.get(fname, machine.name, data)
             picks[label] = {"candidate": ent.candidate,
                             "rank_source": ent.source}
-    else:
-        for label, fname, data in wanted:
-            cand, source = cache.best_variant_with_source(
-                FAMILIES[fname], machine, data)
-            picks[label] = {"candidate": cand, "rank_source": source}
     return picks
 
 
@@ -108,14 +118,18 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
                  max_batch: int = 8, max_len: int = 512,
                  warm_kernels: bool = False,
+                 plan_store: Any = None,
                  machine: MachineDescription = TPU_V5E):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        # resolve kernel-variant dispatch up front (artifact/LRU warm-up)
+        # resolve kernel-variant dispatch up front: a shipped serve-plan
+        # artifact when one matches (zero cold resolutions), else the traced
+        # online warm-up (artifact/LRU resolution + freeze)
         self.kernel_plan = (warm_kernel_dispatch(cfg, machine=machine,
-                                                 max_len=max_len)
+                                                 max_len=max_len,
+                                                 plan_store=plan_store)
                             if warm_kernels else None)
         prefill_step, decode_step = build_serve_steps(cfg)
         # per-slot prefill: batch dim 1 keeps the compiled shape stable

@@ -261,16 +261,19 @@ def test_serving_warmup_feeds_frozen_plan():
     """warm_kernel_dispatch(freeze=True) populates the process cache's
     frozen plan with every reported pick, at parity with the picks."""
     from repro.configs import get_smoke_config
+    from repro.plans import op_label
     from repro.runtime.serving import warm_kernel_dispatch
     cfg = get_smoke_config("llama3_8b")
     picks = warm_kernel_dispatch(cfg, max_len=128)
     cache = get_default_cache()
     plan = cache.frozen_plan
     assert plan is not None and len(plan) == len(picks)
-    d, hd = cfg.d_model, cfg.hd
-    ent = plan.get("flash_attention", TPU_V5E.name, {"SQ": 128, "HD": hd})
+    hd = cfg.hd
+    data = {"SQ": 128, "HD": hd}
+    ent = plan.get("flash_attention", TPU_V5E.name, data)
     assert ent is not None
-    assert ent.candidate == picks[f"flash_attention@SQ{128}"]["candidate"]
+    label = op_label("flash_attention", data)
+    assert ent.candidate == picks[label]["candidate"]
     # freeze=False leaves the plan untouched
     set_default_cache(DispatchCache())
     warm_kernel_dispatch(cfg, max_len=128, freeze=False)

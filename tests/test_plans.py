@@ -1,0 +1,390 @@
+"""repro.plans: traced warm-sets + portable serve-plan artifacts (ISSUE 5).
+
+Acceptance properties:
+
+- traced warm-sets are config-faithful: superset of the legacy hand list
+  for llama3_8b, ``ssd_scan`` present for mamba2_130m, router/expert
+  matmul shapes present for the MoE configs, encoder shapes for whisper;
+- the DispatchCache recording mode captures exactly the requests the
+  dispatch layer sees (trace fidelity: recorded == traced);
+- serve-plan serde is byte-deterministic across two builds of the same
+  (config, machine); stale ``PLAN_FORMAT_VERSION`` and mangled payloads
+  read as a miss (fall back to online warm-up), never an error;
+- frozen parity: a plan-backed freeze answers identically to an online
+  freeze, and a ``ServeEngine`` started from a shipped plan performs zero
+  cold resolutions (``DispatchCache.stats.cold_builds == 0``).
+"""
+import json
+
+import pytest
+
+from repro.artifacts import DispatchCache
+from repro.artifacts.dispatch import get_default_cache, set_default_cache
+from repro.configs import get_config, get_smoke_config
+from repro.core import TPU_V5E
+from repro.kernels.ops import FAMILIES
+from repro.plans import (PLAN_FORMAT_VERSION, PlanStore, apply_serve_plan,
+                         build_serve_plan, load_serve_plan, op_label,
+                         record_warm_set, trace_warm_set, warm_from_plan)
+from repro.plans import serde as plan_serde
+
+
+@pytest.fixture(autouse=True)
+def _isolate_default_cache():
+    set_default_cache(DispatchCache())
+    yield
+    set_default_cache(None)
+
+
+def _triples(ops):
+    return {(op.family, op.data) for op in ops}
+
+
+# ---------------------------------------------------------------------------
+# Trace: config-faithful warm sets
+# ---------------------------------------------------------------------------
+
+def test_traced_superset_of_legacy_hand_list_llama3():
+    """The tracer must cover everything PR 4's hand list warmed."""
+    cfg = get_config("llama3_8b")
+    max_len = 512
+    d, hd = cfg.d_model, cfg.hd
+    legacy = set()
+    for sq in {max_len, 2 * max_len}:
+        legacy.add(("flash_attention", (("HD", hd), ("SQ", sq))))
+    for m, n, k in ((max_len, cfg.d_ff or 4 * d, d),
+                    (max_len, d, cfg.d_ff or 4 * d),
+                    (max_len, cfg.heads * hd, d)):
+        legacy.add(("matmul", (("K", k), ("M", m), ("N", n))))
+    traced = _triples(trace_warm_set(cfg, max_len=max_len))
+    assert legacy <= traced
+
+
+def test_traced_includes_ssd_scan_for_mamba2():
+    """The hand-list coverage bug: Mamba configs must warm ssd_scan."""
+    cfg = get_config("mamba2_130m")
+    traced = trace_warm_set(cfg, max_len=512)
+    fams = {op.family for op in traced}
+    assert "ssd_scan" in fams
+    assert "flash_attention" not in fams          # attention-free arch
+    s = cfg.ssm
+    assert ("ssd_scan", (("HD", s.head_dim), ("SQ", 512),
+                         ("STATE", s.state))) in _triples(traced)
+    # SSM projections are matmuls the hand list never warmed
+    assert ("matmul", (("K", cfg.d_model), ("M", 512),
+                       ("N", s.heads * s.head_dim))) in _triples(traced)
+
+
+def test_traced_includes_hybrid_both_cores():
+    traced = trace_warm_set(get_config("hymba_1p5b"), max_len=512)
+    fams = {op.family for op in traced}
+    assert {"flash_attention", "ssd_scan", "matmul"} <= fams
+
+
+@pytest.mark.parametrize("arch", ["kimi_k2_1t_a32b", "llama4_scout_17b_a16e"])
+def test_traced_includes_moe_router_and_expert_shapes(arch):
+    cfg = get_config(arch)
+    traced = _triples(trace_warm_set(cfg, max_len=512))
+    m, d = cfg.moe, cfg.d_model
+    assert ("matmul", (("K", d), ("M", 512),
+                       ("N", m.num_experts))) in traced   # router
+    expert_n = {n for f, items in traced if f == "matmul"
+                for k, n in items if k == "N"}
+    expert_k = {v for f, items in traced if f == "matmul"
+                for k, v in items if k == "K"}
+    assert m.d_ff_expert in expert_n               # expert up-projection
+    assert m.d_ff_expert in expert_k               # expert down-projection
+
+
+def test_traced_includes_whisper_encoder_shapes():
+    cfg = get_config("whisper_large_v3")
+    traced = _triples(trace_warm_set(cfg, max_len=512))
+    S, d, hd = cfg.encoder.seq_len, cfg.d_model, cfg.hd
+    assert ("flash_attention", (("HD", hd), ("SQ", S))) in traced
+    # encoder blocks are full attention blocks: their projections run at
+    # the frame width (also the decoder cross-attention K/V projections)
+    for n, k in ((cfg.heads * hd, d),          # q proj
+                 (cfg.kv_heads * hd, d),       # kv proj / cross-attn K,V
+                 (d, cfg.heads * hd),          # out proj
+                 (cfg.d_ff, d), (d, cfg.d_ff)):
+        assert ("matmul", (("K", k), ("M", S), ("N", n))) in traced
+
+
+def test_trace_is_deterministic_and_deduplicated():
+    cfg = get_config("llama3_8b")
+    a = trace_warm_set(cfg, max_len=256)
+    b = trace_warm_set(cfg, max_len=256)
+    assert a == b
+    assert len(_triples(a)) == len(a)              # no duplicate triples
+    # shared shapes merge their call sites instead of duplicating
+    qo = [op for op in a if "serve.attn.q_proj" in op.sites]
+    assert qo and "serve.attn.out_proj" in qo[0].sites
+
+
+def test_trace_include_train_adds_train_shapes():
+    cfg = get_config("llama3_8b")
+    serve_only = _triples(trace_warm_set(cfg, max_len=256))
+    with_train = trace_warm_set(cfg, max_len=256, include_train=True,
+                                train_seq=4096, train_batch=8)
+    assert serve_only < _triples(with_train)
+    assert any(s.startswith("train.") for op in with_train for s in op.sites)
+
+
+# ---------------------------------------------------------------------------
+# DispatchCache recording mode
+# ---------------------------------------------------------------------------
+
+def test_record_mode_captures_ops_requests():
+    """Requests through both counted entry points (best_variant and the
+    ops-layer warm_callable) land in the record, normalized and deduped;
+    outside the context nothing is recorded."""
+    import jax
+    from repro.kernels import ops
+    cache = DispatchCache()
+    set_default_cache(cache)
+    a = jax.random.normal(jax.random.PRNGKey(0), (128, 128))
+    with cache.record() as rec:
+        ops.matmul(a, a, impl="pallas", interpret=True)
+        ops.matmul(a, a, impl="pallas", interpret=True)   # dedup, count=2
+        cache.best_variant(FAMILIES["matadd"], TPU_V5E,
+                           {"M": 256, "N": 256})
+    key_mm = ("matmul", TPU_V5E.name,
+              (("K", 128), ("M", 128), ("N", 128)))
+    assert rec.requests[0] == key_mm
+    assert rec.counts[key_mm] == 2
+    assert len(rec) == 2
+    triples = rec.triples()
+    assert triples[1] == ("matadd", TPU_V5E.name, {"M": 256, "N": 256})
+    # recording stopped at context exit
+    cache.best_variant(FAMILIES["matadd"], TPU_V5E, {"M": 512, "N": 512})
+    assert len(rec) == 2
+
+
+def test_record_warm_set_matches_trace():
+    """Trace fidelity: replaying the traced requests through the live
+    dispatch layer records exactly the traced triples, in order."""
+    cfg = get_smoke_config("llama3_8b")
+    cache = DispatchCache()
+    recorded = record_warm_set(cfg, machine=TPU_V5E, cache=cache,
+                               max_len=128)
+    traced = trace_warm_set(cfg, max_len=128)
+    assert [(op.family, op.data) for op in recorded] == \
+           [(op.family, op.data) for op in traced]
+    assert len(cache) == len(traced)               # LRU warmed as a side effect
+
+
+# ---------------------------------------------------------------------------
+# Serde + store: byte determinism, version policy
+# ---------------------------------------------------------------------------
+
+def test_plan_bytes_deterministic_across_builds(tmp_path):
+    cfg = get_smoke_config("llama3_8b")
+    plan_a, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    plan_b, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    assert plan_serde.dumps(plan_a) == plan_serde.dumps(plan_b)
+    assert plan_a.digest() == plan_b.digest()
+    pa = PlanStore(tmp_path / "a").save_plan(plan_a)
+    pb = PlanStore(tmp_path / "b").save_plan(plan_b)
+    assert pa.read_bytes() == pb.read_bytes()
+
+
+def test_plan_roundtrip_preserves_entries(tmp_path):
+    cfg = get_smoke_config("mamba2_130m")
+    plan, dropped = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    assert not dropped
+    assert any(e.family == "ssd_scan" for e in plan.entries)
+    store = PlanStore(tmp_path)
+    store.save_plan(plan)
+    loaded = store.load_plan(cfg.name, TPU_V5E.name)
+    assert loaded == plan
+    for e in loaded.entries:
+        assert e.label == op_label(e.family, e.data_dict())
+        assert e.rank_source in ("measured", "symbolic", "cold")
+
+
+def test_stale_plan_format_version_is_a_miss(tmp_path):
+    cfg = get_smoke_config("llama3_8b")
+    plan, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    store = PlanStore(tmp_path)
+    path = store.save_plan(plan)
+    payload = json.loads(path.read_text())
+    payload["format"] = PLAN_FORMAT_VERSION + 1
+    path.write_text(json.dumps(payload))
+    assert store.load_plan(cfg.name, TPU_V5E.name) is None
+    # and the engine-level warm-up falls back to ONLINE warm-up, not an error
+    cache = DispatchCache()
+    assert warm_from_plan(cfg, max_len=128, store=store, cache=cache) is None
+
+
+@pytest.mark.parametrize("mangle", ["not-json", "kind", "entries",
+                                    "assignment", "rank_source"])
+def test_mangled_plan_payload_is_a_miss(tmp_path, mangle):
+    cfg = get_smoke_config("llama3_8b")
+    plan, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    store = PlanStore(tmp_path)
+    path = store.save_plan(plan)
+    if mangle == "not-json":
+        path.write_text("{truncated")
+    else:
+        payload = json.loads(path.read_text())
+        if mangle == "kind":
+            payload["kind"] = "dispatch"
+        elif mangle == "entries":
+            payload["entries"] = "nope"
+        elif mangle == "assignment":
+            payload["entries"][0]["candidate"]["assignment"] = {"bm": "x"}
+        elif mangle == "rank_source":
+            payload["entries"][0]["rank_source"] = "vibes"
+        path.write_text(json.dumps(payload))
+    assert store.load_plan(cfg.name, TPU_V5E.name) is None
+
+
+def test_machine_bindings_mismatch_is_a_miss(tmp_path):
+    """A plan built for a differently-specced host must not be applied."""
+    cfg = get_smoke_config("llama3_8b")
+    plan, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    tampered = plan_serde.ServePlan(
+        config=plan.config, machine=plan.machine,
+        machine_bindings={**plan.machine_bindings, "V": 1},
+        max_len=plan.max_len, include_train=plan.include_train,
+        entries=plan.entries)
+    store = PlanStore(tmp_path)
+    store.save_plan(tampered)
+    assert load_serve_plan(cfg, store=store) is None
+    assert warm_from_plan(cfg, max_len=128, store=store,
+                          cache=DispatchCache()) is None
+
+
+def test_max_len_mismatch_is_a_miss(tmp_path):
+    cfg = get_smoke_config("llama3_8b")
+    plan, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    store = PlanStore(tmp_path)
+    store.save_plan(plan)
+    assert load_serve_plan(cfg, store=store, max_len=128) is not None
+    assert load_serve_plan(cfg, store=store, max_len=256) is None
+
+
+def test_unknown_family_in_plan_is_a_miss_and_publishes_nothing(tmp_path):
+    cfg = get_smoke_config("llama3_8b")
+    plan, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    bad_entry = plan_serde.PlanEntry(
+        label="bogus@X1", family="bogus_family", data=(("X", 1),),
+        sites=("serve.bogus",), candidate=plan.entries[0].candidate,
+        rank_source="cold")
+    tampered = plan_serde.ServePlan(
+        config=plan.config, machine=plan.machine,
+        machine_bindings=plan.machine_bindings, max_len=plan.max_len,
+        include_train=plan.include_train,
+        entries=plan.entries + (bad_entry,))
+    cache = DispatchCache()
+    assert apply_serve_plan(tampered, cache=cache) is None
+    assert cache.frozen_plan is None               # nothing half-published
+
+
+# ---------------------------------------------------------------------------
+# Plan-backed freeze: zero cold resolutions + parity with online warm-up
+# ---------------------------------------------------------------------------
+
+def test_plan_backed_freeze_zero_cold_and_parity(tmp_path):
+    """Acceptance: a plan-backed start performs zero cold resolutions and
+    answers every warm-set triple identically to an online freeze."""
+    from repro.runtime.serving import warm_kernel_dispatch
+    cfg = get_smoke_config("llama3_8b")
+    plan, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    store = PlanStore(tmp_path)
+    store.save_plan(plan)
+
+    online_cache = DispatchCache()
+    set_default_cache(online_cache)
+    online_picks = warm_kernel_dispatch(cfg, max_len=128, plan_store=False)
+    assert online_cache.stats.cold_builds > 0      # the cost the plan removes
+
+    plan_cache = DispatchCache()
+    set_default_cache(plan_cache)
+    picks = warm_kernel_dispatch(cfg, max_len=128, plan_store=store)
+    assert plan_cache.stats.cold_builds == 0
+    assert plan_cache.stats.disk_hits == 0 and plan_cache.stats.memory_hits == 0
+    assert picks.keys() == online_picks.keys()
+    for label in picks:
+        assert picks[label]["candidate"] == online_picks[label]["candidate"]
+    # the frozen plans resolve identically too
+    for op in trace_warm_set(cfg, max_len=128):
+        a = plan_cache.frozen_entry(op.family, TPU_V5E.name, op.data_dict())
+        b = online_cache.frozen_entry(op.family, TPU_V5E.name, op.data_dict())
+        assert a is not None and b is not None
+        assert a.candidate == b.candidate
+    # steady-state dispatch through the plan-backed cache stays cold-free
+    for op in trace_warm_set(cfg, max_len=128):
+        plan_cache.best_variant(FAMILIES[op.family], TPU_V5E, op.data_dict())
+    assert plan_cache.stats.cold_builds == 0
+
+
+def test_serve_engine_starts_from_shipped_plan(tmp_path):
+    """Acceptance at the engine level: ServeEngine(warm_kernels=True) with a
+    shipped plan artifact pins every pick without a single cold build."""
+    import jax
+    from repro.models import init_model
+    from repro.runtime import ServeEngine
+    from repro.runtime.serving import warm_kernel_dispatch
+    cfg = get_smoke_config("llama3_8b")
+    plan, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    store = PlanStore(tmp_path)
+    store.save_plan(plan)
+
+    online_cache = DispatchCache()
+    set_default_cache(online_cache)
+    online_picks = warm_kernel_dispatch(cfg, max_len=128, plan_store=False)
+
+    cache = DispatchCache()
+    set_default_cache(cache)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=128,
+                      warm_kernels=True, plan_store=store)
+    assert cache.stats.cold_builds == 0
+    assert eng.kernel_plan.keys() == online_picks.keys()
+    for label, info in eng.kernel_plan.items():
+        assert info["candidate"] == online_picks[label]["candidate"]
+    assert len(cache.frozen_plan) == len(eng.kernel_plan)
+
+
+def test_warm_kernel_dispatch_falls_back_online_without_plan(tmp_path):
+    """No plan artifact (or plan_store=False): traced online warm-up, and
+    Mamba's ssd_scan is now part of it (the hand-list fix end to end)."""
+    from repro.runtime.serving import warm_kernel_dispatch
+    cfg = get_smoke_config("mamba2_130m")
+    cache = DispatchCache()
+    set_default_cache(cache)
+    picks = warm_kernel_dispatch(cfg, max_len=128,
+                                 plan_store=PlanStore(tmp_path))  # empty dir
+    assert any(label.startswith("ssd_scan@") for label in picks)
+    assert cache.stats.cold_builds > 0
+    assert cache.frozen_plan is not None and len(cache.frozen_plan) == \
+        len(picks)
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke (the CI plan-build contract)
+# ---------------------------------------------------------------------------
+
+def test_plan_artifacts_cli_dry_run_and_build(tmp_path, capsys):
+    import importlib.util
+    import os
+    spec = importlib.util.spec_from_file_location(
+        "plan_artifacts", os.path.join(os.path.dirname(__file__), "..",
+                                       "scripts", "plan_artifacts.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+
+    rc = mod.main(["--config", "llama3_8b", "--smoke", "--machine",
+                   "tpu_v5e", "--max-len", "128", "--dry-run"])
+    out = capsys.readouterr().out
+    assert rc == 0 and "[dry-run]" in out and "traced triples" in out
+    assert not (tmp_path / "plans").exists()
+
+    rc = mod.main(["--config", "llama3_8b", "--smoke", "--machine",
+                   "tpu_v5e", "--max-len", "128", "--out", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 0 and "[OK]" in out
+    cfg = get_smoke_config("llama3_8b")
+    loaded = PlanStore(tmp_path).load_plan(cfg.name, TPU_V5E.name)
+    assert loaded is not None and len(loaded.entries) > 0
