@@ -266,8 +266,10 @@ def bench_serve_decode(quick=False):
         eng = ServeEngine(cfg, params, max_batch=4, max_len=128,
                           warm_kernels=True)
         rng = np.random.default_rng(0)
-        # warmup tick set: compile prefill/decode outside the timed region
-        eng.submit(rng.integers(0, cfg.vocab, 8), max_new=2)
+        # warmup tick set: compile prefill/decode outside the timed region.
+        # A 31-token prompt prefills in chunks 16+8+4+2+1 — every quantized
+        # chunk shape the timed prompts (4..23 tokens) can hit.
+        eng.submit(rng.integers(0, cfg.vocab, 31), max_new=2)
         eng.run_until_drained()
         nreq, max_new = (3, 8) if quick else (8, 16)
         for _ in range(nreq):
@@ -283,6 +285,79 @@ def bench_serve_decode(quick=False):
     return [("serve_decode_smoke", dt * 1e6 / toks,
              f"tok/s={toks / dt:.0f} requests={nreq} "
              f"frozen={len(eng.kernel_plan)}picks")]
+
+
+def bench_serve_load(quick=False):
+    """Poisson-arrival load over the paged engine: requests arrive mid-
+    flight with mixed prompt/output lengths, exercising chunked prefill
+    interleaved with decode, block-pool churn, and admission head-room —
+    the production-traffic shape the scheduler exists for.
+
+    Rows: ``serve_load_tok_us`` (host-side microseconds per generated token
+    over the whole run), ``serve_load_p50_us`` / ``serve_load_p99_us``
+    (per-token latency distribution: each generated token is charged its
+    engine tick's wall time — the inter-token gap a client of that request
+    observes).  CPU-XLA; relative signal, gated like the other serve rows."""
+    from repro.artifacts.dispatch import (DispatchCache, get_default_cache,
+                                          set_default_cache)
+    from repro.configs import get_smoke_config
+    from repro.models import init_model
+    from repro.runtime import ServeEngine
+    cfg = get_smoke_config("llama3_8b")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    prior = get_default_cache()
+    set_default_cache(DispatchCache())
+    try:
+        eng = ServeEngine(cfg, params, max_batch=4, max_len=128,
+                          page_size=16, prefill_chunk=16, warm_kernels=True)
+        rng = np.random.default_rng(0)
+        # warmup: a 31-token prompt prefills in chunks 16+8+4+2+1 —
+        # every quantized chunk shape the timed run can hit — plus decode
+        eng.submit(rng.integers(0, cfg.vocab, 31), max_new=2)
+        eng.run_until_drained()
+        nreq = 5 if quick else 12
+        # Poisson arrivals (exponential inter-arrival gaps, in ticks) with
+        # a short/long prompt mixture and mixed output budgets
+        gaps = rng.exponential(scale=2.0, size=nreq)
+        arrive = np.floor(np.cumsum(gaps)).astype(int)
+        plens = [int(rng.integers(4, 13)) if rng.random() < 0.7
+                 else int(rng.integers(24, 57)) for _ in range(nreq)]
+        news = [int(rng.integers(4, 9 if quick else 17))
+                for _ in range(nreq)]
+        per_token, done, submitted, tick = [], [], 0, 0
+        t_start = time.perf_counter()
+        while len(done) < nreq and tick < 10_000:
+            while submitted < nreq and arrive[submitted] <= tick:
+                eng.submit(rng.integers(0, cfg.vocab, plens[submitted]),
+                           max_new=news[submitted])
+                submitted += 1
+            before = sum(len(s.req.out) for s in eng.sched.running())
+            t0 = time.perf_counter()
+            finished = eng.step()
+            dt = (time.perf_counter() - t0) * 1e6
+            after = sum(len(s.req.out) for s in eng.sched.running()) \
+                + sum(len(r.out) for r in finished)
+            per_token.extend([dt] * max(0, after - before))
+            done.extend(finished)
+            tick += 1
+        total_s = time.perf_counter() - t_start
+    finally:
+        set_default_cache(prior)
+    toks = sum(len(r.out) for r in done)
+    assert len(done) == nreq and toks > 0 and per_token
+    eng.pool.check_invariants()
+    st = eng.sched.stats
+    lat = np.asarray(per_token)
+    meta = (f"tok/s={toks / total_s:.0f} requests={nreq} ticks={tick} "
+            f"chunks={st.prefill_chunks} preempt={st.preemptions} "
+            f"waits={st.admission_waits}")
+    return [
+        ("serve_load_tok_us", total_s * 1e6 / toks, meta),
+        ("serve_load_p50_us", float(np.percentile(lat, 50)),
+         f"tokens={toks}"),
+        ("serve_load_p99_us", float(np.percentile(lat, 99)),
+         f"tokens={toks}"),
+    ]
 
 
 def bench_plan_load(quick=False):
@@ -411,6 +486,7 @@ BENCH_GROUPS = (
     ("dispatch_reference", bench_dispatch_reference),
     ("warm", bench_warm_dispatch),
     ("serve", bench_serve_decode),
+    ("load", bench_serve_load),
     ("plan", bench_plan_load),
     ("compile", bench_compile_sweep),
     ("tuning", bench_tuning_sweep),

@@ -51,6 +51,10 @@ def main(argv=None) -> int:
                          "decide the resolutions")
     ap.add_argument("--max-len", type=int, default=512,
                     help="serve window the warm set is traced for")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged-KV block size the warm set is traced for "
+                         "(0 = dense layout; must match the engine's "
+                         "page_size for the plan to be a hit)")
     ap.add_argument("--include-train", action="store_true",
                     help="also trace the train-step shapes into the plan")
     ap.add_argument("--train-seq", type=int, default=4096)
@@ -69,7 +73,8 @@ def main(argv=None) -> int:
     except ModuleNotFoundError as e:
         ap.error(f"unknown config {e.name!r}; have {sorted(ARCH_IDS)}")
     machines = [MACHINES[m] for m in (args.machine or ["tpu_v5e"])]
-    trace_kw = dict(max_len=args.max_len, include_train=args.include_train,
+    trace_kw = dict(max_len=args.max_len, page_size=args.page_size,
+                    include_train=args.include_train,
                     train_seq=args.train_seq, train_batch=args.train_batch)
 
     if args.dry_run:

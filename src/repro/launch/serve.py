@@ -1,6 +1,8 @@
-"""Serving launcher: continuous-batching engine over a reduced config.
+"""Serving launcher: paged continuous-batching engine over a reduced config.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 12
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
+        --block-size 16 --prefill-chunk 32 --num-blocks 64   # KV-pool knobs
 """
 from __future__ import annotations
 
@@ -25,6 +27,16 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV cache block size in token positions "
+                         "(joins the kernel-dispatch bucket keys)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size in blocks incl. the reserved garbage "
+                         "block (default: every slot can hold max-len; "
+                         "smaller exercises admission waits + preemption)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="max tokens prefilled per engine tick (chunked "
+                         "prefill; tails quantize to powers of two)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--warm-kernels", action="store_true",
                     help="pre-resolve kernel-variant dispatch at engine "
@@ -44,7 +56,10 @@ def main() -> None:
     params, _ = init_model(jax.random.PRNGKey(args.seed), cfg)
     plan_store = PlanStore(args.plan_dir) if args.plan_dir else None
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
-                      max_len=args.max_len, warm_kernels=args.warm_kernels,
+                      max_len=args.max_len, page_size=args.block_size,
+                      num_blocks=args.num_blocks,
+                      prefill_chunk=args.prefill_chunk,
+                      warm_kernels=args.warm_kernels,
                       plan_store=plan_store)
     if eng.kernel_plan:
         for name, info in eng.kernel_plan.items():
@@ -61,8 +76,12 @@ def main() -> None:
     toks = sum(len(r.out) for r in done)
     for r in done[:4]:
         print(f"req {r.rid}: {r.out}")
+    st = eng.sched.stats
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s)")
+          f"({toks/dt:.1f} tok/s); pool {eng.pool.capacity} blocks x "
+          f"{eng.page_size} tokens, peak_live={eng.pool.stats.peak_live}, "
+          f"prefill_chunks={st.prefill_chunks}, "
+          f"preemptions={st.preemptions}, waits={st.admission_waits}")
 
 
 if __name__ == "__main__":

@@ -188,6 +188,7 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
               context: Optional[jax.Array] = None,
               precomputed_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
               return_kv: bool = False,
+              block_tables: Optional[jax.Array] = None,
               ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Self- (or cross-, when ``context`` given) attention.
 
@@ -197,6 +198,12 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     cross K/V cached at prefill and skips the projections.
     return_kv: return the projected (k, v) instead of a cache dict (the
     whisper prefill writes them into the cross cache).
+    block_tables: (B, nblk) int32 — *paged* KV cache.  The cache leaves are
+    then block pools of shape (num_blocks, page_size, nk, hd) shared by
+    every sequence, and row ``b``'s logical block ``j`` lives in physical
+    block ``block_tables[b, j]``.  Unallocated entries may point anywhere
+    (conventionally the engine's garbage block 0): their logical positions
+    lie beyond the row's ``cache_index`` and are causally masked.
     """
     B, Sq, d = x.shape
     nh, nk, hd = cfg.heads, cfg.kv_heads, cfg.hd
@@ -226,7 +233,27 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
         pass                                          # cross-attn: no rope
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and block_tables is not None:
+        # Paged KV pool (serving): scatter this call's K/V into the rows'
+        # physical blocks, then gather each row's logical view for the
+        # attention read.  Works for both the per-row decode step
+        # (cache_index (B,), Sq == 1) and the batch-1 chunked-prefill step
+        # (scalar cache_index, Sq == chunk).  Window semantics come from
+        # the sdpa mask, not a ring buffer — the pool is position-exact.
+        ps = cache["k"].shape[1]
+        idxv = (cache_index if jnp.ndim(cache_index) == 1
+                else jnp.broadcast_to(cache_index, (B,)))
+        ptok = idxv[:, None] + jnp.arange(Sq)[None]          # (B,Sq) logical
+        phys = jnp.take_along_axis(block_tables, ptok // ps, axis=1)
+        pslot = ptok % ps
+        ck = cache["k"].at[phys, pslot].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[phys, pslot].set(v.astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        nblk = block_tables.shape[1]
+        k_att = ck[block_tables].reshape(B, nblk * ps, nk, hd).astype(x.dtype)
+        v_att = cv[block_tables].reshape(B, nblk * ps, nk, hd).astype(x.dtype)
+        k_positions = jnp.arange(nblk * ps)
+    elif cache is not None:
         k_len = cache["k"].shape[1]
         ring = cfg.window is not None and k_len <= cfg.window
         vec_idx = cache_index is not None and jnp.ndim(cache_index) == 1

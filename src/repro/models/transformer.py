@@ -123,6 +123,7 @@ def block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
                 cache: Optional[Dict[str, jax.Array]] = None,
                 cache_index: Optional[jax.Array] = None,
                 causal: bool = True,
+                block_tables: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
     """Apply one block.  Returns (x, aux_loss, new_cache).
 
@@ -149,7 +150,8 @@ def block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
             p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
             positions=positions,
             cache=({"k": cache["k"], "v": cache["v"]} if cache else None),
-            cache_index=cache_index, causal=causal)
+            cache_index=cache_index, causal=causal,
+            block_tables=block_tables)
         ssm_state = cache.get("ssm") if cache else None
         ssd, new_state = L.ssm_block(
             p["ssm"], L.rmsnorm(p["lns"], x, cfg.norm_eps), cfg,
@@ -164,7 +166,8 @@ def block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
             p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
             positions=positions,
             cache=({"k": cache["k"], "v": cache["v"]} if cache else None),
-            cache_index=cache_index, causal=causal)
+            cache_index=cache_index, causal=causal,
+            block_tables=block_tables)
         x = x + _residual(att)
         if kv is not None:
             new_cache.update(kv)
@@ -438,6 +441,121 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
         y, _, nc = block_apply(lp, carry, cfg, positions=positions,
                                cache=lc, cache_index=cache_index,
                                causal=True)
+        return y, nc
+
+    x, new_cache = _scan_layers(body, x, (params["layers"], cache),
+                                cfg.layers, unroll=unroll)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged (block-pool) serving path
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, page_size: int,
+                     batch: int, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Block-pool decode cache for the paged serving engine.
+
+    Attention K/V live in a shared pool of ``num_blocks`` fixed-size blocks
+    of ``page_size`` token positions each — requests own non-contiguous
+    block lists (their *block table*), so memory scales with live tokens,
+    not ``max_batch × max_len``.  Block 0 is conventionally the garbage
+    block (never allocated; dead decode rows write there).  SSM recurrent
+    state is O(1) per sequence and stays per-slot, keyed by decode row.
+    Encoder-decoder configs are not served by the paged engine (the CLI
+    rejects them too).
+    """
+    if cfg.encoder is not None:
+        raise ValueError("paged serving does not support encoder-decoder "
+                         "configs")
+    Lc = cfg.layers
+    c: Dict[str, jax.Array] = {}
+    if _has_attn(cfg):
+        c["k"] = jnp.zeros((Lc, num_blocks, page_size, cfg.kv_heads, cfg.hd),
+                           dtype)
+        c["v"] = jnp.zeros((Lc, num_blocks, page_size, cfg.kv_heads, cfg.hd),
+                           dtype)
+    if _has_ssm(cfg):
+        s = cfg.ssm
+        c["ssm"] = jnp.zeros((Lc, batch, s.heads, s.state, s.head_dim),
+                             jnp.float32)
+    return c
+
+
+def paged_prefill_chunk(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                        cache: Dict[str, jax.Array], cache_index: jax.Array,
+                        block_table: jax.Array, slot: jax.Array, *,
+                        unroll: bool = False,
+                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One chunk of a paged prefill: ``tokens`` (1, C) at logical offset
+    ``cache_index`` of the sequence whose block table is ``block_table``
+    (1, nblk) and whose decode-pool row (SSM state) is ``slot``.
+
+    Chunks carry no padding (the engine quantizes chunk lengths instead),
+    so the recurrent SSM state threads exactly and the returned last-token
+    logits of the *final* chunk equal whole-prompt prefill's.  Returns
+    (last-token logits (1, V), new cache); the caller tracks the index.
+    """
+    B, S = tokens.shape
+    dtype = _dtype(cfg)
+    x = L.embed(params["embed"], tokens, dtype)
+    positions = cache_index + jnp.arange(S)
+    has_ssm = _has_ssm(cfg)
+
+    def body(carry, xs):
+        lp, lc = xs
+        lc_in = dict(lc)
+        if has_ssm:
+            lc_in["ssm"] = jax.lax.dynamic_slice_in_dim(
+                lc["ssm"], slot, 1, axis=0)
+        y, _, nc = block_apply(lp, carry, cfg, positions=positions,
+                               cache=lc_in, cache_index=cache_index,
+                               causal=True, block_tables=block_table)
+        if has_ssm:
+            nc["ssm"] = jax.lax.dynamic_update_slice_in_dim(
+                lc["ssm"], nc["ssm"], slot, axis=0)
+        return y, nc
+
+    x, new_cache = _scan_layers(_remat(body, cfg), x,
+                                (params["layers"], cache), cfg.layers,
+                                unroll=unroll)
+    x = L.rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)[:, 0]
+    return logits, new_cache
+
+
+def paged_decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                      cache: Dict[str, jax.Array], cache_index: jax.Array,
+                      block_tables: jax.Array, *,
+                      ssm_mask: Optional[jax.Array] = None,
+                      unroll: bool = False,
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step over the paged pool: ``tokens`` (B, 1) with per-row
+    ``cache_index`` (B,) and ``block_tables`` (B, nblk).
+
+    Dead rows point their whole table at the garbage block (0) with index
+    0; their writes land there and their logits are ignored by the engine.
+    KV writes of non-decoding rows are harmless (garbage block), but the
+    recurrent SSM state is per-slot and *would* absorb their garbage step —
+    ``ssm_mask`` (B,) bool keeps the old state for rows not decoding (dead
+    slots, and slots whose chunked prefill is still in flight).
+    """
+    B, S = tokens.shape
+    assert S == 1
+    dtype = _dtype(cfg)
+    x = L.embed(params["embed"], tokens, dtype)
+    positions = cache_index[:, None] + jnp.arange(S)[None]
+
+    def body(carry, xs):
+        lp, lc = xs
+        y, _, nc = block_apply(lp, carry, cfg, positions=positions,
+                               cache=lc, cache_index=cache_index,
+                               causal=True, block_tables=block_tables)
+        if ssm_mask is not None and "ssm" in nc:
+            keep = ssm_mask[:, None, None, None]
+            nc["ssm"] = jnp.where(keep, nc["ssm"], lc["ssm"])
         return y, nc
 
     x, new_cache = _scan_layers(body, x, (params["layers"], cache),

@@ -36,7 +36,8 @@ from .trace import TracedOp, trace_warm_set
 
 def build_serve_plan(cfg: ModelConfig, *,
                      machine: MachineDescription = TPU_V5E,
-                     max_len: int = 512, include_train: bool = False,
+                     max_len: int = 512, page_size: int = 0,
+                     include_train: bool = False,
                      train_seq: int = 4096, train_batch: int = 8,
                      cache: Optional[DispatchCache] = None
                      ) -> Tuple[ServePlan, List[TracedOp]]:
@@ -49,7 +50,7 @@ def build_serve_plan(cfg: ModelConfig, *,
     from the plan and returned separately for reporting."""
     from ..kernels.ops import FAMILIES
     cache = cache if cache is not None else get_default_cache()
-    traced = trace_warm_set(cfg, max_len=max_len,
+    traced = trace_warm_set(cfg, max_len=max_len, page_size=page_size,
                             include_train=include_train,
                             train_seq=train_seq, train_batch=train_batch)
     entries: List[PlanEntry] = []
@@ -66,7 +67,8 @@ def build_serve_plan(cfg: ModelConfig, *,
                                  candidate=cand, rank_source=source))
     plan = ServePlan(config=cfg.name, machine=machine.name,
                      machine_bindings=dict(machine.bindings()),
-                     max_len=max_len, include_train=include_train,
+                     max_len=max_len, page_size=page_size,
+                     include_train=include_train,
                      entries=tuple(entries))
     return plan, dropped
 
@@ -78,14 +80,16 @@ def build_serve_plan(cfg: ModelConfig, *,
 def load_serve_plan(cfg: ModelConfig, *,
                     machine: MachineDescription = TPU_V5E,
                     store: Optional[PlanStore] = None,
-                    max_len: Optional[int] = None
+                    max_len: Optional[int] = None,
+                    page_size: Optional[int] = None
                     ) -> Optional[ServePlan]:
     """Load + validate the plan for (config, machine); ``None`` on any miss.
 
     Validation beyond the store's own format check: the plan must name this
     config, carry the current machine *bindings* (a renamed or re-specced
-    host reads as a miss, like stale dispatch tables), and — when
-    ``max_len`` is given — have been traced for the same serve window."""
+    host reads as a miss, like stale dispatch tables), and — when given —
+    have been traced for the same serve window (``max_len``) and paged KV
+    block size (``page_size``; 0 is the dense layout)."""
     store = store if store is not None else resolve_env_store()
     if store is None:
         return None
@@ -97,6 +101,8 @@ def load_serve_plan(cfg: ModelConfig, *,
     if plan.machine_bindings != machine.bindings():
         return None
     if max_len is not None and plan.max_len != int(max_len):
+        return None
+    if page_size is not None and plan.page_size != int(page_size):
         return None
     return plan
 
@@ -134,14 +140,14 @@ def apply_serve_plan(plan: ServePlan, *,
 
 def warm_from_plan(cfg: ModelConfig, *,
                    machine: MachineDescription = TPU_V5E,
-                   max_len: int = 512,
+                   max_len: int = 512, page_size: int = 0,
                    store: Optional[PlanStore] = None,
                    cache: Optional[DispatchCache] = None
                    ) -> Optional[Dict[str, Any]]:
     """The plan-backed warm-up: load, validate, freeze.  ``None`` on any
     miss — the caller (``warm_kernel_dispatch``) falls back online."""
     plan = load_serve_plan(cfg, machine=machine, store=store,
-                           max_len=max_len)
+                           max_len=max_len, page_size=page_size)
     if plan is None or not plan.entries:
         return None
     return apply_serve_plan(plan, machine=machine, cache=cache)

@@ -21,6 +21,10 @@ falls back to online warm-up, never errors.  Bump the version on any schema
 
 Version history:
   1 — traced warm set + resolved candidates + rank_source (PR 5).
+  2 — ``page_size`` joins the plan identity (PR 6): the paged serving
+      engine's attention bucket keys carry the KV block size, so a plan
+      traced for one block size (or the dense layout, ``page_size=0``)
+      must read as a miss for any other.
 """
 from __future__ import annotations
 
@@ -31,7 +35,7 @@ from ..artifacts import serde as artifact_serde
 from ..artifacts.serde import ArtifactFormatError
 from ..core.select import Candidate
 
-PLAN_FORMAT_VERSION = 1
+PLAN_FORMAT_VERSION = 2
 
 _RANK_SOURCES = ("measured", "symbolic", "cold")
 
@@ -59,6 +63,7 @@ class ServePlan:
     machine: str                             # MachineDescription.name
     machine_bindings: Dict[str, int]         # stale-machine guard
     max_len: int                             # trace parameter the plan is for
+    page_size: int                           # paged KV block size (0 = dense)
     include_train: bool
     entries: Tuple[PlanEntry, ...]
 
@@ -126,6 +131,7 @@ def plan_to_obj(plan: ServePlan) -> Dict[str, Any]:
         "machine_bindings": {k: int(v)
                              for k, v in plan.machine_bindings.items()},
         "max_len": int(plan.max_len),
+        "page_size": int(plan.page_size),
         "include_train": bool(plan.include_train),
         "entries": [entry_to_obj(e) for e in plan.entries],
     }
@@ -148,6 +154,7 @@ def obj_to_plan(obj: Mapping[str, Any]) -> ServePlan:
         machine_bindings={str(k): int(v)
                           for k, v in obj["machine_bindings"].items()},
         max_len=int(obj["max_len"]),
+        page_size=int(obj["page_size"]),
         include_train=bool(obj["include_train"]),
         entries=tuple(obj_to_entry(e) for e in obj["entries"]),
     )

@@ -69,14 +69,14 @@ class TracedOp:
 # Abstract step drivers
 # ---------------------------------------------------------------------------
 
-def _iter_requests(cfg: ModelConfig, *, max_len: int,
+def _iter_requests(cfg: ModelConfig, *, max_len: int, page_size: int,
                    include_train: bool, train_seq: int, train_batch: int
                    ) -> Iterator[Tuple[str, str, Dict[str, int]]]:
     """Yield ``(site, family, data)`` per abstract kernel op, serve steps
     first, then (optionally) the train step.  Mirrors the block families of
     ``models.transformer.block_apply``."""
     yield from _step_requests(cfg, tokens=max_len, prefix="serve",
-                              decode_guard=True)
+                              decode_guard=True, page_size=page_size)
     if include_train:
         yield from _step_requests(cfg, tokens=train_batch * train_seq,
                                   seq=train_seq, prefix="train",
@@ -84,12 +84,17 @@ def _iter_requests(cfg: ModelConfig, *, max_len: int,
 
 
 def _step_requests(cfg: ModelConfig, *, tokens: int, prefix: str,
-                   decode_guard: bool, seq: Optional[int] = None
+                   decode_guard: bool, seq: Optional[int] = None,
+                   page_size: int = 0
                    ) -> Iterator[Tuple[str, str, Dict[str, int]]]:
     """One step's ops.  ``tokens`` is the token-parallel matmul width M;
     ``seq`` the attention/scan sequence length (defaults to ``tokens``).
     ``decode_guard`` additionally traces the cores at ``2·seq`` — the
-    growing-context shapes the decode loop reaches after prefill."""
+    growing-context shapes the decode loop reaches after prefill.
+    ``page_size > 0`` is the paged-KV serve path: the attention gather
+    extent is the block grid (``ceil(seq/page_size)·page_size``), so the
+    attention-core bucket keys carry the block size (a ``max_len`` already
+    on the grid traces identically to the dense path)."""
     d, hd = cfg.d_model, cfg.hd
     seq = seq if seq is not None else tokens
     has_attn = cfg.block in ("attn_mlp", "attn_moe", "hybrid")
@@ -97,9 +102,11 @@ def _step_requests(cfg: ModelConfig, *, tokens: int, prefix: str,
     has_mlp = cfg.block in ("attn_mlp", "hybrid") or (
         cfg.block == "ssm" and cfg.d_ff > 0)
     core_seqs = (seq, 2 * seq) if decode_guard else (seq,)
+    aseq = -(-seq // page_size) * page_size if page_size else seq
+    attn_seqs = (aseq, 2 * aseq) if decode_guard else (aseq,)
 
     if has_attn:
-        for sq in core_seqs:
+        for sq in attn_seqs:
             yield (f"{prefix}.attn.core@{sq}", "flash_attention",
                    {"SQ": sq, "HD": hd})
         yield (f"{prefix}.attn.q_proj", "matmul",
@@ -165,18 +172,22 @@ def _step_requests(cfg: ModelConfig, *, tokens: int, prefix: str,
 
 
 def trace_warm_set(cfg: ModelConfig, *, max_len: int = 512,
+                   page_size: int = 0,
                    include_train: bool = False, train_seq: int = 4096,
                    train_batch: int = 8) -> List[TracedOp]:
     """The config's warm set: ordered, deduplicated by (family, data).
 
     Pure derivation — no dispatch cache is touched and nothing resolves, so
     this is cheap enough to call on every engine start.  Deterministic: the
-    same (config, max_len, train flags) always yields the same list in the
-    same order (serve-plan artifacts are byte-stable because of it)."""
+    same (config, max_len, page_size, train flags) always yields the same
+    list in the same order (serve-plan artifacts are byte-stable because of
+    it).  ``page_size > 0`` traces the paged serve path (see
+    :func:`_step_requests`); 0 is the dense layout."""
     out: List[TracedOp] = []
     index: Dict[Tuple[str, Tuple[Tuple[str, int], ...]], int] = {}
     for site, family, data in _iter_requests(
-            cfg, max_len=max_len, include_train=include_train,
+            cfg, max_len=max_len, page_size=page_size,
+            include_train=include_train,
             train_seq=train_seq, train_batch=train_batch):
         items = tuple(sorted((k, int(v)) for k, v in data.items()))
         key = (family, items)
@@ -194,7 +205,7 @@ def trace_warm_set(cfg: ModelConfig, *, max_len: int = 512,
 
 def record_warm_set(cfg: ModelConfig, *,
                     machine: MachineDescription = TPU_V5E,
-                    cache=None, max_len: int = 512,
+                    cache=None, max_len: int = 512, page_size: int = 0,
                     include_train: bool = False, train_seq: int = 4096,
                     train_batch: int = 8) -> List[TracedOp]:
     """Drive the traced requests through the live dispatch layer and return
@@ -210,7 +221,7 @@ def record_warm_set(cfg: ModelConfig, *,
     from ..artifacts.dispatch import get_default_cache
     from ..kernels.ops import FAMILIES
     cache = cache if cache is not None else get_default_cache()
-    traced = trace_warm_set(cfg, max_len=max_len,
+    traced = trace_warm_set(cfg, max_len=max_len, page_size=page_size,
                             include_train=include_train,
                             train_seq=train_seq, train_batch=train_batch)
     feasible: Dict[Tuple[str, Tuple[Tuple[str, int], ...]], bool] = {}

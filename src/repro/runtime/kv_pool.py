@@ -1,0 +1,126 @@
+"""Paged KV cache pool: host-side block accounting for the serving engine.
+
+The device-side layout is a shared pool of ``num_blocks`` fixed-size KV
+blocks per layer (:func:`repro.models.init_paged_cache`); this module owns
+the *accounting*: which physical blocks are free, which belong to which
+request, and whether admission head-room exists.  It is pure host Python —
+no jax — so its invariants (no leaks, no double allocation, deterministic
+order) are testable under heavy churn without touching a device.
+
+Design points (the vLLM block-manager shape, reduced to essentials):
+
+* **fixed-size blocks** — every block covers ``page_size`` consecutive
+  logical token positions of one sequence; a request holding ``n`` tokens
+  owns ``ceil(n / page_size)`` blocks, listed in logical order in its
+  *block table*.
+* **free-list allocation** — allocation pops from a free stack
+  (deterministic: a fresh pool hands out blocks 1, 2, 3, …; freed blocks
+  are reused most-recently-freed first).  ``alloc`` is all-or-nothing.
+* **copy-free retirement** — finishing (or preempting) a request returns
+  its blocks to the free list; nothing on the device moves.  Stale KV in a
+  reused block is overwritten position-by-position by its next owner and
+  is causally masked until then.
+* **reserved garbage block 0** — never allocated; dead decode-batch rows
+  point their whole block table at it so the batched decode step has a
+  harmless write target.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+GARBAGE_BLOCK = 0
+
+
+@dataclass
+class PoolStats:
+    allocs: int = 0                  # successful alloc() calls
+    frees: int = 0                   # free() calls
+    blocks_allocated: int = 0        # cumulative blocks handed out
+    blocks_freed: int = 0            # cumulative blocks returned
+    alloc_failures: int = 0          # all-or-nothing refusals
+    peak_live: int = 0               # high-water mark of live blocks
+
+
+@dataclass
+class PagedKVPool:
+    """Free-list allocator over ``num_blocks`` physical KV blocks.
+
+    ``num_blocks`` counts physical blocks *including* the reserved garbage
+    block 0, matching the leading pool axis of the device cache leaves.
+    """
+
+    num_blocks: int
+    page_size: int
+    stats: PoolStats = field(default_factory=PoolStats)
+
+    def __post_init__(self) -> None:
+        if self.num_blocks < 2:
+            raise ValueError("pool needs >= 2 blocks (block 0 is reserved)")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        # stack: pop() yields 1, 2, 3, ... on a fresh pool
+        self._free: List[int] = list(range(self.num_blocks - 1, 0, -1))
+        self._live: set = set()
+
+    # -- sizing ---------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (excludes the garbage block)."""
+        return self.num_blocks - 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        return len(self._live)
+
+    def blocks_for(self, tokens: int) -> int:
+        """Blocks needed to hold ``tokens`` logical positions."""
+        return -(-max(int(tokens), 0) // self.page_size)
+
+    # -- alloc / free ---------------------------------------------------------
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` blocks, or ``None`` (and nothing changes) if the pool
+        cannot satisfy the whole request — callers never hold a partial
+        grant they would have to unwind."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            self.stats.alloc_failures += 1
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self._live.update(got)
+        self.stats.allocs += 1
+        self.stats.blocks_allocated += n
+        self.stats.peak_live = max(self.stats.peak_live, len(self._live))
+        return got
+
+    def free(self, blocks: List[int]) -> None:
+        """Return blocks to the free list.  Double-frees and frees of the
+        garbage block are accounting bugs and raise immediately."""
+        for b in blocks:
+            if b not in self._live:
+                raise ValueError(f"free of non-live block {b}")
+            self._live.discard(b)
+            self._free.append(b)
+        self.stats.frees += 1
+        self.stats.blocks_freed += len(blocks)
+
+    # -- invariants -----------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Raise if accounting broke: every block is exactly free or live,
+        block 0 is neither, and nothing was minted or lost."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise AssertionError("duplicate entries in the free list")
+        if free & self._live:
+            raise AssertionError("block both free and live")
+        if GARBAGE_BLOCK in free or GARBAGE_BLOCK in self._live:
+            raise AssertionError("garbage block 0 entered circulation")
+        if len(free) + len(self._live) != self.capacity:
+            raise AssertionError(
+                f"leak: {len(free)} free + {len(self._live)} live != "
+                f"{self.capacity} capacity")

@@ -1,0 +1,256 @@
+"""Host-side async serving scheduler: admission, chunked prefill, preemption.
+
+``ServeEngine.step`` delegates every *decision* to :class:`Scheduler.tick`,
+which returns a :class:`TickPlan` of tensor work to perform; the engine
+only executes it.  One tick is one engine step:
+
+1. **decode-priority block top-up** — every sequence in decode owns the KV
+   block its next token writes into before anything else runs; when the
+   pool is exhausted, the *youngest-admitted* running sequence is preempted
+   by eviction (its blocks return to the pool, its request re-enters the
+   queue front for recompute — generated tokens are kept and re-prefilled
+   as part of the prompt).
+2. **admission control** — strict FIFO.  A request is admitted only when a
+   decode-batch slot is free AND the pool has head-room for its whole
+   prompt plus one decode block plus a watermark of ``watermark_blocks``
+   (default ``max_batch``: one block of decode head-room per potential
+   decode row).  This is the long-prompt guard: a prompt that fits in a
+   slot but not in the pool waits in the queue instead of being admitted
+   and then starving decode via preemption storms.
+3. **chunked prefill** — at most one prompt chunk per tick (the oldest
+   admitted sequence still prefilling), so prefill work is interleaved
+   with decode steps and decode latency stays bounded under prompt
+   bursts.  Chunk lengths are quantized (full ``prefill_chunk``-sized
+   chunks, then a power-of-two decomposition of the remainder) so the
+   compiled chunk-shape set is O(log ``prefill_chunk``) instead of one
+   shape per prompt length.
+
+Starvation bound: FIFO admission + oldest-first prefill + decode running
+every tick give every admitted sequence progress within
+:meth:`Scheduler.progress_bound` ticks (tests assert it).  Preemption
+resets a sequence's clock — it re-enters at the queue *front* (it is by
+construction older than everything still queued, so global FIFO order is
+preserved).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from .kv_pool import PagedKVPool
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                   # (S,) int32
+    max_new: int = 16
+    eos: Optional[int] = None
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class SeqState:
+    """One admitted sequence: its request plus pool/slot bookkeeping."""
+
+    req: Request
+    slot: int
+    target: np.ndarray                   # tokens to prefill (prompt [+ out])
+    admitted_at: int
+    last_progress: int
+    blocks: List[int] = field(default_factory=list)
+    filled: int = 0                      # prefilled positions
+    pos: int = 0                         # cache positions written
+
+    @property
+    def prefilling(self) -> bool:
+        return self.filled < len(self.target)
+
+
+@dataclass
+class SchedStats:
+    admissions: int = 0
+    preemptions: int = 0
+    prefill_chunks: int = 0
+    decode_ticks: int = 0
+    admission_waits: int = 0             # head-of-line blocked on head-room
+
+
+@dataclass
+class TickPlan:
+    """The tensor work one engine step must perform, in order."""
+
+    admitted: List[SeqState] = field(default_factory=list)
+    prefill: Optional[Tuple[SeqState, int, int]] = None  # (seq, start, len)
+    decode: List[SeqState] = field(default_factory=list)
+    preempted: List[SeqState] = field(default_factory=list)
+
+
+class Scheduler:
+    def __init__(self, pool: PagedKVPool, *, max_batch: int, max_len: int,
+                 prefill_chunk: int = 32,
+                 watermark_blocks: Optional[int] = None):
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1: {prefill_chunk}")
+        self.pool = pool
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.watermark = (max_batch if watermark_blocks is None
+                          else watermark_blocks)
+        self.queue: Deque[Request] = collections.deque()
+        self.slots: List[Optional[SeqState]] = [None] * max_batch
+        self.ticks = 0
+        self.stats = SchedStats()
+
+    # -- client side ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Queue a request.  Rejects up front what could never be served:
+        the prompt plus the full generation budget must fit both the serve
+        window and the pool."""
+        total = len(req.prompt) + req.max_new
+        if total > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} exceeds max_len {self.max_len}")
+        if self.pool.blocks_for(total) > self.pool.capacity:
+            raise ValueError(
+                f"request {req.rid}: needs "
+                f"{self.pool.blocks_for(total)} blocks, pool capacity is "
+                f"{self.pool.capacity}")
+        self.queue.append(req)
+
+    def running(self) -> List[SeqState]:
+        return [s for s in self.slots if s is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def progress_bound(self) -> int:
+        """Ticks within which every *admitted, non-preempted* sequence is
+        guaranteed progress: decode rows progress every tick; a prefilling
+        sequence waits at most for every older sequence's remaining chunks
+        (each prompt is at most ``ceil(max_len/prefill_chunk)`` full chunks
+        plus the power-of-two tail of its remainder)."""
+        chunks_per_seq = (-(-self.max_len // self.prefill_chunk)
+                          + max(1, self.prefill_chunk).bit_length())
+        return self.max_batch * chunks_per_seq + 1
+
+    # -- the tick -------------------------------------------------------------
+    def tick(self) -> TickPlan:
+        t = self.ticks
+        self.ticks += 1
+        plan = TickPlan()
+
+        # 1. decode priority: secure the write block of every decode row,
+        # evicting the youngest running sequence when the pool runs dry
+        for seq in sorted((s for s in self.running() if not s.prefilling),
+                          key=lambda s: (s.admitted_at, s.req.rid)):
+            if self.slots[seq.slot] is not seq:
+                continue                       # evicted by an older row
+            while self.pool.blocks_for(seq.pos + 1) > len(seq.blocks):
+                got = self.pool.alloc(1)
+                if got is not None:
+                    seq.blocks.extend(got)
+                    continue
+                victim = self._youngest_running()
+                self._preempt(victim)
+                plan.preempted.append(victim)
+                if victim is seq:
+                    break
+        decoding = [s for s in self.running() if not s.prefilling]
+
+        # 2. FIFO admission with KV head-room (the long-prompt guard).
+        # Head-room is judged against free blocks MINUS what running
+        # sequences have claimed but not yet allocated (admitted prompts
+        # only take blocks as their chunks prefill) — otherwise a long
+        # admitted prompt is invisible to the next admission.
+        for slot in range(self.max_batch):
+            if not self.queue:
+                break
+            if self.slots[slot] is not None:
+                continue
+            req = self.queue[0]
+            target = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.out, np.int32)]).astype(np.int32)
+            needed = self.pool.blocks_for(len(target) + 1)
+            committed = sum(
+                max(0, self.pool.blocks_for(len(s.target) + 1)
+                    - len(s.blocks))
+                for s in self.running())
+            reserve = self.watermark if self.running() else 0
+            if self.pool.num_free - committed < needed + reserve:
+                self.stats.admission_waits += 1
+                break                          # strict FIFO: head blocks
+            self.queue.popleft()
+            seq = SeqState(req=req, slot=slot, target=target,
+                           admitted_at=t, last_progress=t)
+            self.slots[slot] = seq
+            plan.admitted.append(seq)
+            self.stats.admissions += 1
+
+        # 3. one prefill chunk: oldest admitted sequence still prefilling
+        for seq in sorted((s for s in self.running() if s.prefilling),
+                          key=lambda s: (s.admitted_at, s.req.rid)):
+            c = self._chunk_len(len(seq.target) - seq.filled)
+            need = self.pool.blocks_for(seq.filled + c) - len(seq.blocks)
+            if need > 0:
+                got = self.pool.alloc(need)
+                if got is None:
+                    continue                   # pool tight: wait for retires
+                seq.blocks.extend(got)
+            plan.prefill = (seq, seq.filled, c)
+            break
+
+        plan.decode = decoding
+        if decoding:
+            self.stats.decode_ticks += 1
+        return plan
+
+    # -- engine feedback ------------------------------------------------------
+    def note_prefill(self, seq: SeqState, chunk: int) -> None:
+        seq.filled += chunk
+        seq.pos = seq.filled
+        seq.last_progress = self.ticks
+        self.stats.prefill_chunks += 1
+
+    def note_decode(self, seq: SeqState) -> None:
+        seq.pos += 1
+        seq.last_progress = self.ticks
+
+    def retire(self, seq: SeqState) -> None:
+        """Copy-free retirement: blocks go back to the free list, the slot
+        frees for the next admission.  Nothing on the device moves."""
+        if seq.blocks:
+            self.pool.free(seq.blocks)
+        seq.blocks = []
+        self.slots[seq.slot] = None
+
+    # -- internals ------------------------------------------------------------
+    def _chunk_len(self, remaining: int) -> int:
+        """Full chunks of ``prefill_chunk``; the tail decomposes into
+        powers of two (largest first) to bound the compiled shape set."""
+        if remaining >= self.prefill_chunk:
+            return self.prefill_chunk
+        return 1 << (remaining.bit_length() - 1)
+
+    def _youngest_running(self) -> SeqState:
+        return max(self.running(),
+                   key=lambda s: (s.admitted_at, s.req.rid))
+
+    def _preempt(self, seq: SeqState) -> None:
+        """Evict by recompute: free the blocks, keep the generated tokens,
+        and requeue at the *front* (the victim predates everything still
+        queued, so FIFO order is preserved).  On re-admission the prompt
+        plus generated tokens re-prefill and decode continues."""
+        if seq.blocks:
+            self.pool.free(seq.blocks)
+        seq.blocks = []
+        self.slots[seq.slot] = None
+        self.queue.appendleft(seq.req)
+        self.stats.preemptions += 1

@@ -1,31 +1,43 @@
-"""Batched serving engine: continuous-batching decode over a KV cache pool.
+"""Paged serving engine: block KV pool + chunked prefill + async scheduler.
 
 A minimal-but-real engine in the vLLM mold, sized for the dry-run shapes:
 
-* requests arrive with a prompt; the engine packs up to ``max_batch`` live
-  sequences into one decode batch backed by a shared cache;
-* prefill runs per-request (right-padded into the batch slot), decode runs
-  for the whole batch every step;
-* finished sequences (EOS or ``max_new``) free their slot for the next
-  queued request (continuous batching).
+* **block/paged KV cache** — attention K/V live in a shared pool of
+  fixed-size blocks (:class:`repro.runtime.kv_pool.PagedKVPool` owns the
+  accounting, :func:`repro.models.init_paged_cache` the device layout).
+  A request owns ``ceil(tokens / page_size)`` blocks listed in its block
+  table; retirement returns them to the free list copy-free.  KV memory
+  scales with *live tokens*, not ``max_batch × max_len``.
+* **chunked prefill** — prompts enter the cache one scheduler-visible
+  chunk per tick, interleaved with decode, so a long prompt never stalls
+  in-flight decodes for its whole length.  Chunk lengths are quantized
+  (``prefill_chunk``-sized chunks + a power-of-two tail) so the compiled
+  prefill-shape set is O(log ``prefill_chunk``), with no padding — the
+  recurrent SSM state threads exactly and chunked prefill is token-for-
+  token equal to whole-prompt prefill.
+* **host-side scheduler** — :class:`repro.runtime.scheduler.Scheduler`
+  makes every decision (FIFO admission under a free-block budget,
+  decode-priority, preemption-by-eviction with recompute);
+  :meth:`ServeEngine.step` only executes the returned tick plan.
 
-The compiled decode step is shape-stable: (B, 1) tokens + the cache pytree,
-so serving never recompiles after warmup.
+The compiled steps are shape-stable — decode is (B, 1) tokens + (B, nblk)
+block tables every tick; prefill compiles one variant per quantized chunk
+length — so serving never recompiles after warmup.
 """
 from __future__ import annotations
 
-import collections
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.params import MachineDescription, TPU_V5E
-from ..models import init_cache
+from ..models import init_paged_cache, paged_decode_step, paged_prefill_chunk
 from ..models.config import ModelConfig
-from .steps import build_serve_steps, greedy_sample
+from .kv_pool import GARBAGE_BLOCK, PagedKVPool
+from .scheduler import Request, Scheduler, SeqState
+from .steps import greedy_sample
 
 PyTree = Any
 
@@ -33,6 +45,7 @@ PyTree = Any
 def warm_kernel_dispatch(cfg: ModelConfig, *,
                          machine: MachineDescription = TPU_V5E,
                          max_len: int = 512,
+                         page_size: int = 0,
                          freeze: bool = True,
                          plan_store: Any = None) -> Dict[str, Any]:
     """Pre-resolve the kernel variants this model's serve path will ask for.
@@ -41,7 +54,11 @@ def warm_kernel_dispatch(cfg: ModelConfig, *,
     list but the config's *traced* dispatch set
     (:func:`repro.plans.trace.trace_warm_set` — so Mamba/hybrid configs warm
     ``ssd_scan``, MoE configs warm their router/expert projections, whisper
-    warms the encoder shapes).  Two paths:
+    warms the encoder shapes).  ``page_size > 0`` traces the *paged* serve
+    path: attention sequence extents round up to the block grid, so the
+    dispatch bucket keys carry the block size and a paged engine start hits
+    the same frozen entries it will dispatch through (``page_size=0`` keeps
+    the dense trace).  Two paths:
 
     - **plan-backed** (preferred): with ``freeze=True``, a serve-plan
       artifact built offline by ``scripts/plan_artifacts.py`` — looked up in
@@ -74,13 +91,14 @@ def warm_kernel_dispatch(cfg: ModelConfig, *,
 
     if freeze and plan_store is not False:
         picks = warm_from_plan(cfg, machine=machine, max_len=max_len,
+                               page_size=page_size,
                                store=plan_store or None, cache=cache)
         if picks is not None:
             return picks
 
     wanted: List[Any] = []
     picks: Dict[str, Any] = {}
-    for op in trace_warm_set(cfg, max_len=max_len):
+    for op in trace_warm_set(cfg, max_len=max_len, page_size=page_size):
         fam, data = FAMILIES[op.family], op.data_dict()
         try:
             # feasibility probe (and the full resolution when not freezing;
@@ -104,79 +122,133 @@ def warm_kernel_dispatch(cfg: ModelConfig, *,
     return picks
 
 
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                   # (S,) int32
-    max_new: int = 16
-    eos: Optional[int] = None
-    out: List[int] = field(default_factory=list)
-    done: bool = False
-
-
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
                  max_batch: int = 8, max_len: int = 512,
+                 page_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 prefill_chunk: int = 32,
+                 watermark_blocks: Optional[int] = None,
                  warm_kernels: bool = False,
                  plan_store: Any = None,
                  machine: MachineDescription = TPU_V5E):
+        if cfg.encoder is not None:
+            raise ValueError("ServeEngine does not serve encoder-decoder "
+                             "configs")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.page_size = page_size
+        self.blocks_per_seq = -(-max_len // page_size)
+        if num_blocks is None:
+            # default pool: every slot can hold a full-length sequence
+            # (+ the reserved garbage block), so admission is slot-bound
+            # exactly like the dense engine was.  Size it smaller to
+            # exercise head-room waits and preemption.
+            num_blocks = max_batch * self.blocks_per_seq + 1
         # resolve kernel-variant dispatch up front: a shipped serve-plan
         # artifact when one matches (zero cold resolutions), else the traced
-        # online warm-up (artifact/LRU resolution + freeze)
+        # online warm-up (artifact/LRU resolution + freeze).  The paged
+        # block size is part of the traced bucket keys.
         self.kernel_plan = (warm_kernel_dispatch(cfg, machine=machine,
                                                  max_len=max_len,
+                                                 page_size=page_size,
                                                  plan_store=plan_store)
                             if warm_kernels else None)
-        prefill_step, decode_step = build_serve_steps(cfg)
-        # per-slot prefill: batch dim 1 keeps the compiled shape stable
-        self._prefill = jax.jit(prefill_step)
-        self._decode = jax.jit(decode_step, donate_argnums=(2,))
-        self.cache = init_cache(cfg, max_batch, max_len)
-        self.index = np.zeros(max_batch, np.int32)       # per-slot position
+        self.pool = PagedKVPool(num_blocks, page_size)
+        self.sched = Scheduler(self.pool, max_batch=max_batch,
+                               max_len=max_len, prefill_chunk=prefill_chunk,
+                               watermark_blocks=watermark_blocks)
+
+        def _prefill(params, tokens, cache, start, block_table, slot):
+            return paged_prefill_chunk(params, cfg, tokens, cache, start,
+                                       block_table, slot)
+
+        def _decode(params, tokens, cache, index, block_tables, ssm_mask):
+            return paged_decode_step(params, cfg, tokens, cache, index,
+                                     block_tables, ssm_mask=ssm_mask)
+
+        # one compile per quantized chunk length; decode is shape-stable
+        self._prefill = jax.jit(_prefill, donate_argnums=(2,))
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+        self.cache = init_paged_cache(cfg, num_blocks, page_size, max_batch)
         self.last_tok = np.zeros((max_batch, 1), np.int32)
-        self.slots: List[Optional[Request]] = [None] * max_batch
-        self.queue: collections.deque = collections.deque()
         self._rid = 0
 
     # -- client API -----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int = 16,
                eos: Optional[int] = None) -> int:
         self._rid += 1
-        self.queue.append(Request(self._rid, np.asarray(prompt, np.int32),
+        self.sched.submit(Request(self._rid, np.asarray(prompt, np.int32),
                                   max_new, eos))
         return self._rid
 
-    def _admit(self) -> None:
-        for slot in range(self.max_batch):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            self.slots[slot] = req
-            # per-request prefill into a FRESH batch-1 cache, then scatter
-            # the slot's rows into the pool.  Zeroing matters: attention KV
-            # rows are position-masked, but recurrent SSM state from the
-            # slot's previous occupant would contaminate the new request.
-            sub = jax.tree.map(
-                lambda c: jnp.zeros_like(c[:, slot:slot + 1]), self.cache)
-            toks = jnp.asarray(req.prompt[None, :])
-            logits, sub = self._prefill(self.params, toks, sub)
-            self.cache = jax.tree.map(
-                lambda pool, s: pool.at[:, slot:slot + 1].set(s),
-                self.cache, sub)
-            nxt = np.asarray(greedy_sample(logits))      # (1,1)
-            self.index[slot] = req.prompt.shape[0]
-            self.last_tok[slot] = nxt[0]
-            req.out.append(int(nxt[0, 0]))
+    # -- tick execution -------------------------------------------------------
+    def _block_table(self, seq: SeqState) -> np.ndarray:
+        """Fixed-width (nblk,) table: owned blocks in logical order, tail
+        padded with the garbage block (never addressed: positions beyond
+        the sequence are causally masked)."""
+        bt = np.full(self.blocks_per_seq, GARBAGE_BLOCK, np.int32)
+        bt[:len(seq.blocks)] = seq.blocks
+        return bt
+
+    def _reset_slot(self, slot: int) -> None:
+        # KV needs no wipe — stale blocks are position-masked until their
+        # next owner overwrites them — but the recurrent SSM state is
+        # per-slot and must start from zero for a new occupant.
+        self.last_tok[slot] = 0
+        if "ssm" in self.cache:
+            self.cache["ssm"] = self.cache["ssm"].at[:, slot].set(0.0)
+
+    def step(self) -> List[Request]:
+        """One engine tick: execute the scheduler's plan (admit slots,
+        one prefill chunk, batched decode), then retire."""
+        plan = self.sched.tick()
+        for seq in plan.admitted:
+            self._reset_slot(seq.slot)
+        if plan.prefill is not None:
+            seq, start, chunk = plan.prefill
+            toks = jnp.asarray(seq.target[None, start:start + chunk])
+            logits, self.cache = self._prefill(
+                self.params, toks, self.cache, jnp.int32(start),
+                jnp.asarray(self._block_table(seq)[None]),
+                jnp.int32(seq.slot))
+            self.sched.note_prefill(seq, chunk)
+            if not seq.prefilling:
+                # final chunk: its last-token logits seed decode, exactly
+                # as whole-prompt prefill would
+                nxt = np.asarray(greedy_sample(logits))      # (1, 1)
+                self.last_tok[seq.slot] = nxt[0]
+                seq.req.out.append(int(nxt[0, 0]))
+        if plan.decode:
+            bts = np.full((self.max_batch, self.blocks_per_seq),
+                          GARBAGE_BLOCK, np.int32)
+            idx = np.zeros(self.max_batch, np.int32)
+            mask = np.zeros(self.max_batch, bool)
+            for seq in plan.decode:
+                bts[seq.slot, :len(seq.blocks)] = seq.blocks
+                idx[seq.slot] = seq.pos
+                mask[seq.slot] = True
+            # one decode for the whole pool with per-row block tables
+            # (continuous batching); non-decoding rows write the garbage
+            # block and keep their SSM state via the mask.
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(self.last_tok), self.cache,
+                jnp.asarray(idx), jnp.asarray(bts), jnp.asarray(mask))
+            nxt = np.asarray(greedy_sample(logits))
+            for seq in plan.decode:
+                self.last_tok[seq.slot] = nxt[seq.slot]
+                seq.req.out.append(int(nxt[seq.slot, 0]))
+                self.sched.note_decode(seq)
+        return self._retire()
 
     def _retire(self) -> List[Request]:
         done = []
-        for slot, req in enumerate(self.slots):
-            if req is None:
+        for seq in list(self.sched.running()):
+            if seq.prefilling:
                 continue
+            req = seq.req
             if req.eos is not None and req.eos in req.out:
                 # stop at the first EOS; later speculative tokens (decode
                 # runs before retire) are truncated away
@@ -187,32 +259,13 @@ class ServeEngine:
                 req.done = True
             if req.done:
                 done.append(req)
-                self.slots[slot] = None
+                self.sched.retire(seq)       # copy-free: blocks → free list
         return done
-
-    def step(self) -> List[Request]:
-        """One engine tick: admit, decode the live pool, retire."""
-        self._admit()
-        live = [s for s in range(self.max_batch) if self.slots[s] is not None]
-        if live:
-            # one decode for the whole pool with per-row cache indices
-            # (continuous batching); dead slots write garbage at their own
-            # positions, which the next admit's prefill overwrites.
-            toks = jnp.asarray(self.last_tok)
-            logits, self.cache = self._decode(
-                self.params, toks, self.cache,
-                jnp.asarray(self.index, jnp.int32))
-            nxt = np.asarray(greedy_sample(logits))
-            for s in live:
-                self.last_tok[s] = nxt[s]
-                self.index[s] += 1
-                self.slots[s].out.append(int(nxt[s, 0]))
-        return self._retire()
 
     def run_until_drained(self, max_ticks: int = 1000) -> List[Request]:
         finished: List[Request] = []
         for _ in range(max_ticks):
             finished.extend(self.step())
-            if not self.queue and all(s is None for s in self.slots):
+            if not self.sched.has_work():
                 break
         return finished

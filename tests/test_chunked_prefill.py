@@ -1,0 +1,122 @@
+"""Chunked paged prefill must be token-for-token equal to whole-prompt
+prefill — chunks carry no padding, so the recurrent SSM state and MoE
+routing see exactly the same tokens either way."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import (init_cache, init_model, init_paged_cache,
+                          paged_prefill_chunk, prefill)
+from repro.runtime import ServeEngine
+from repro.runtime.kv_pool import GARBAGE_BLOCK
+
+
+def _chunked_logits(cfg, params, prompt, chunks, page_size=8):
+    """Drive the prompt through paged_prefill_chunk in the given pieces and
+    return the final chunk's last-token logits."""
+    assert sum(chunks) == len(prompt)
+    nblk = -(-len(prompt) // page_size)
+    cache = init_paged_cache(cfg, nblk + 1, page_size, batch=1)
+    table = jnp.asarray(np.arange(1, nblk + 1, dtype=np.int32)[None])
+    toks = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    logits, start = None, 0
+    for c in chunks:
+        logits, cache = paged_prefill_chunk(
+            params, cfg, toks[:, start:start + c], cache, jnp.int32(start),
+            table, jnp.int32(0))
+        start += c
+    return logits[0]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["yi_6b", "mamba2_130m", "hymba_1p5b",
+                                  "kimi_k2_1t_a32b"])
+def test_chunked_prefill_matches_whole_prompt(arch):
+    """dense / SSM / hybrid-window / MoE: the final chunk's greedy token
+    equals whole-prompt prefill's, and — where the layer semantics admit
+    it — so do the logits.
+
+    The MoE config is greedy-token only: GShard capacity dropping is
+    applied per routing call, so a whole 13-token group and an 8-token
+    chunk legitimately drop *different* overflow tokens when an expert's
+    capacity binds.  Token-for-token generation equality (the serving
+    contract) is asserted; exact logits equality is not a property the
+    capacity-dropping layer has across group sizes."""
+    cfg = get_smoke_config(arch)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, 13)      # 13 -> chunks 8+4+1
+    want, _ = prefill(params, cfg, jnp.asarray(prompt[None], jnp.int32),
+                      init_cache(cfg, 1, 32))
+    want = want[0]
+    got = _chunked_logits(cfg, params, prompt, [8, 4, 1])
+    assert int(jnp.argmax(got)) == int(jnp.argmax(want)), arch
+    if cfg.block != "attn_moe":
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.slow
+def test_single_chunk_equals_many_chunks():
+    """Chunk-boundary invariance: any decomposition yields the same logits
+    (exact — the same ops run over the same tokens, only split)."""
+    cfg = get_smoke_config("mamba2_130m")        # recurrent state threading
+    params, _ = init_model(jax.random.PRNGKey(1), cfg)
+    prompt = np.random.default_rng(1).integers(0, cfg.vocab, 12)
+    one = _chunked_logits(cfg, params, prompt, [12])
+    many = _chunked_logits(cfg, params, prompt, [4, 4, 2, 1, 1])
+    np.testing.assert_allclose(np.asarray(many, np.float32),
+                               np.asarray(one, np.float32),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_engine_pool_no_leaks_across_churn():
+    """Continuous batching over more requests than slots: every retirement
+    returns its blocks; the drained pool is exactly full again."""
+    cfg = get_smoke_config("yi_6b")
+    params, _ = init_model(jax.random.PRNGKey(2), cfg)
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=48, page_size=8,
+                      prefill_chunk=8)
+    rng = np.random.default_rng(2)
+    for i in range(7):
+        eng.submit(rng.integers(0, cfg.vocab, int(rng.integers(3, 20))),
+                   max_new=3)
+    done = eng.run_until_drained()
+    assert len(done) == 7
+    eng.pool.check_invariants()
+    assert eng.pool.num_live == 0
+    assert eng.pool.num_free == eng.pool.capacity
+    # every block table the engine built stayed off the garbage block
+    assert all(GARBAGE_BLOCK not in eng.pool._live for _ in range(1))
+
+
+@pytest.mark.slow
+def test_preemption_recompute_is_deterministic():
+    """A pool too small for concurrent decode growth forces preemption;
+    recompute (re-prefill of prompt + generated tokens) must reproduce the
+    un-preempted outputs exactly (greedy decode is deterministic)."""
+    cfg = get_smoke_config("yi_6b")
+    params, _ = init_model(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(3)
+    # equal-length prompts: both rows decode concurrently, and their joint
+    # growth (2 x 19 tokens = 10 blocks) exceeds the tight pool's 8
+    prompts = [rng.integers(0, cfg.vocab, 9) for _ in range(3)]
+
+    def run(num_blocks):
+        eng = ServeEngine(cfg, params, max_batch=2, max_len=48, page_size=4,
+                          prefill_chunk=8, num_blocks=num_blocks,
+                          watermark_blocks=0)
+        for p in prompts:
+            eng.submit(p, max_new=10)
+        done = {r.rid: r.out for r in eng.run_until_drained()}
+        assert len(done) == 3
+        return done, eng
+
+    roomy, _ = run(None)                         # full-size pool: no pressure
+    tight, eng = run(9)                          # 32-token pool
+    assert eng.sched.stats.preemptions > 0       # pressure actually happened
+    assert tight == roomy
+    eng.pool.check_invariants()

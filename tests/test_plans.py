@@ -121,6 +121,25 @@ def test_trace_is_deterministic_and_deduplicated():
     assert qo and "serve.attn.out_proj" in qo[0].sites
 
 
+def test_paged_trace_rounds_attention_to_block_grid():
+    """page_size > 0 (the paged serving engine) folds the KV block size
+    into the attention-core bucket keys: the gather extent is the block
+    grid, so a non-aligned serve window rounds up; projections keep the
+    token-parallel width; an aligned window traces identically to dense."""
+    cfg = get_config("llama3_8b")
+    hd, d = cfg.hd, cfg.d_model
+    paged = _triples(trace_warm_set(cfg, max_len=40, page_size=16))
+    assert ("flash_attention", (("HD", hd), ("SQ", 48))) in paged
+    assert ("flash_attention", (("HD", hd), ("SQ", 96))) in paged
+    assert not any(f == "flash_attention" and ("SQ", 40) in items
+                   for f, items in paged)
+    assert ("matmul", (("K", d), ("M", 40),
+                       ("N", cfg.heads * hd))) in paged   # q_proj unrounded
+    # on-grid window: byte-identical to the dense trace
+    assert trace_warm_set(cfg, max_len=128, page_size=16) == \
+        trace_warm_set(cfg, max_len=128)
+
+
 def test_trace_include_train_adds_train_shapes():
     cfg = get_config("llama3_8b")
     serve_only = _triples(trace_warm_set(cfg, max_len=256))
@@ -246,7 +265,8 @@ def test_machine_bindings_mismatch_is_a_miss(tmp_path):
     tampered = plan_serde.ServePlan(
         config=plan.config, machine=plan.machine,
         machine_bindings={**plan.machine_bindings, "V": 1},
-        max_len=plan.max_len, include_train=plan.include_train,
+        max_len=plan.max_len, page_size=plan.page_size,
+        include_train=plan.include_train,
         entries=plan.entries)
     store = PlanStore(tmp_path)
     store.save_plan(tampered)
@@ -264,6 +284,28 @@ def test_max_len_mismatch_is_a_miss(tmp_path):
     assert load_serve_plan(cfg, store=store, max_len=256) is None
 
 
+def test_page_size_mismatch_is_a_miss(tmp_path):
+    """A plan traced for one paged block size (or the dense layout) must
+    not warm an engine running another: the attention bucket keys differ
+    off the block grid, and the plan identity keeps them apart even when
+    the traces happen to coincide."""
+    cfg = get_smoke_config("llama3_8b")
+    store = PlanStore(tmp_path)
+    dense_plan, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    store.save_plan(dense_plan)
+    assert load_serve_plan(cfg, store=store, page_size=0) is not None
+    assert load_serve_plan(cfg, store=store, page_size=16) is None
+    assert warm_from_plan(cfg, max_len=128, page_size=16, store=store,
+                          cache=DispatchCache()) is None
+    paged_plan, _ = build_serve_plan(cfg, max_len=128, page_size=16,
+                                     cache=DispatchCache())
+    store.save_plan(paged_plan)                 # same (config, machine) file
+    assert load_serve_plan(cfg, store=store, page_size=16) is not None
+    picks = warm_from_plan(cfg, max_len=128, page_size=16, store=store,
+                           cache=DispatchCache())
+    assert picks is not None and len(picks) == len(paged_plan.entries)
+
+
 def test_unknown_family_in_plan_is_a_miss_and_publishes_nothing(tmp_path):
     cfg = get_smoke_config("llama3_8b")
     plan, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
@@ -274,7 +316,7 @@ def test_unknown_family_in_plan_is_a_miss_and_publishes_nothing(tmp_path):
     tampered = plan_serde.ServePlan(
         config=plan.config, machine=plan.machine,
         machine_bindings=plan.machine_bindings, max_len=plan.max_len,
-        include_train=plan.include_train,
+        page_size=plan.page_size, include_train=plan.include_train,
         entries=plan.entries + (bad_entry,))
     cache = DispatchCache()
     assert apply_serve_plan(tampered, cache=cache) is None
@@ -327,18 +369,22 @@ def test_serve_engine_starts_from_shipped_plan(tmp_path):
     from repro.runtime import ServeEngine
     from repro.runtime.serving import warm_kernel_dispatch
     cfg = get_smoke_config("llama3_8b")
-    plan, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    # built for the engine's paged block size — the plan identity carries
+    # page_size, so a dense-traced plan would (correctly) read as a miss
+    plan, _ = build_serve_plan(cfg, max_len=128, page_size=16,
+                               cache=DispatchCache())
     store = PlanStore(tmp_path)
     store.save_plan(plan)
 
     online_cache = DispatchCache()
     set_default_cache(online_cache)
-    online_picks = warm_kernel_dispatch(cfg, max_len=128, plan_store=False)
+    online_picks = warm_kernel_dispatch(cfg, max_len=128, page_size=16,
+                                        plan_store=False)
 
     cache = DispatchCache()
     set_default_cache(cache)
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(cfg, params, max_batch=2, max_len=128,
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=128, page_size=16,
                       warm_kernels=True, plan_store=store)
     assert cache.stats.cold_builds == 0
     assert eng.kernel_plan.keys() == online_picks.keys()
