@@ -287,48 +287,56 @@ def bench_serve_decode(quick=False):
              f"frozen={len(eng.kernel_plan)}picks")]
 
 
-def bench_serve_load(quick=False):
-    """Poisson-arrival load over the paged engine: requests arrive mid-
-    flight with mixed prompt/output lengths, exercising chunked prefill
-    interleaved with decode, block-pool churn, and admission head-room —
-    the production-traffic shape the scheduler exists for.
-
-    Rows: ``serve_load_tok_us`` (host-side microseconds per generated token
-    over the whole run), ``serve_load_p50_us`` / ``serve_load_p99_us``
-    (per-token latency distribution: each generated token is charged its
-    engine tick's wall time — the inter-token gap a client of that request
-    observes).  CPU-XLA; relative signal, gated like the other serve rows."""
+def _serve_load_scenario(arch, row, *, quick, nreq, arrival_scale=2.0,
+                         plen_fn=None, max_new_hi=None, shared_len=0,
+                         prefix_sharing=True, async_depth=2):
+    """One load-bench traffic scenario: Poisson arrivals (inter-arrival
+    gaps ~ Exp(``arrival_scale``) ticks; 0 = burst, everything at tick 0)
+    of mixed-length requests against the ``arch`` smoke config, reported
+    as three ``{row}_{tok,p50,p99}_us`` rows.  ``plen_fn(rng)`` draws one
+    prompt length (default: the 70% short / 30% long production mix);
+    ``shared_len > 0`` prepends a common system-prompt prefix of that many
+    tokens to every request — the prefix-sharing fast path (auto-disabled
+    engine-side for SSM-bearing archs).  Per-token latency charges each
+    generated token its engine tick's wall time — the inter-token gap a
+    client of that request observes.  Pool invariants (incl. block-table /
+    free-list disjointness) are asserted every tick."""
     from repro.artifacts.dispatch import (DispatchCache, get_default_cache,
                                           set_default_cache)
     from repro.configs import get_smoke_config
     from repro.models import init_model
     from repro.runtime import ServeEngine
-    cfg = get_smoke_config("llama3_8b")
+    cfg = get_smoke_config(arch)
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
     prior = get_default_cache()
     set_default_cache(DispatchCache())
     try:
         eng = ServeEngine(cfg, params, max_batch=4, max_len=128,
-                          page_size=16, prefill_chunk=16, warm_kernels=True)
+                          page_size=16, prefill_chunk=16,
+                          prefix_sharing=prefix_sharing,
+                          async_depth=async_depth, warm_kernels=True)
         rng = np.random.default_rng(0)
         # warmup: a 31-token prompt prefills in chunks 16+8+4+2+1 —
         # every quantized chunk shape the timed run can hit — plus decode
         eng.submit(rng.integers(0, cfg.vocab, 31), max_new=2)
         eng.run_until_drained()
-        nreq = 5 if quick else 12
-        # Poisson arrivals (exponential inter-arrival gaps, in ticks) with
-        # a short/long prompt mixture and mixed output budgets
-        gaps = rng.exponential(scale=2.0, size=nreq)
+        shared = rng.integers(0, cfg.vocab, shared_len)
+        if plen_fn is None:
+            def plen_fn(r):                  # 70% short / 30% long mix
+                return (int(r.integers(4, 13)) if r.random() < 0.7
+                        else int(r.integers(24, 57)))
+        gaps = (rng.exponential(scale=arrival_scale, size=nreq)
+                if arrival_scale > 0 else np.zeros(nreq))
         arrive = np.floor(np.cumsum(gaps)).astype(int)
-        plens = [int(rng.integers(4, 13)) if rng.random() < 0.7
-                 else int(rng.integers(24, 57)) for _ in range(nreq)]
-        news = [int(rng.integers(4, 9 if quick else 17))
+        plens = [plen_fn(rng) for _ in range(nreq)]
+        news = [int(rng.integers(4, max_new_hi or (9 if quick else 17)))
                 for _ in range(nreq)]
         per_token, done, submitted, tick = [], [], 0, 0
         t_start = time.perf_counter()
         while len(done) < nreq and tick < 10_000:
             while submitted < nreq and arrive[submitted] <= tick:
-                eng.submit(rng.integers(0, cfg.vocab, plens[submitted]),
+                tail = rng.integers(0, cfg.vocab, plens[submitted])
+                eng.submit(np.concatenate([shared, tail]),
                            max_new=news[submitted])
                 submitted += 1
             before = sum(len(s.req.out) for s in eng.sched.running())
@@ -339,24 +347,162 @@ def bench_serve_load(quick=False):
                 + sum(len(r.out) for r in finished)
             per_token.extend([dt] * max(0, after - before))
             done.extend(finished)
+            eng.pool.check_invariants(
+                [s.blocks for s in eng.sched.running()])
             tick += 1
         total_s = time.perf_counter() - t_start
     finally:
         set_default_cache(prior)
     toks = sum(len(r.out) for r in done)
     assert len(done) == nreq and toks > 0 and per_token
-    eng.pool.check_invariants()
-    st = eng.sched.stats
+    st, pst = eng.sched.stats, eng.pool.stats
     lat = np.asarray(per_token)
     meta = (f"tok/s={toks / total_s:.0f} requests={nreq} ticks={tick} "
             f"chunks={st.prefill_chunks} preempt={st.preemptions} "
-            f"waits={st.admission_waits}")
+            f"waits={st.admission_waits} "
+            f"prefix_saved={pst.prefix_tokens_saved} "
+            f"cow={pst.cow_copies}")
     return [
-        ("serve_load_tok_us", total_s * 1e6 / toks, meta),
-        ("serve_load_p50_us", float(np.percentile(lat, 50)),
-         f"tokens={toks}"),
-        ("serve_load_p99_us", float(np.percentile(lat, 99)),
-         f"tokens={toks}"),
+        (f"{row}_tok_us", total_s * 1e6 / toks, meta),
+        (f"{row}_p50_us", float(np.percentile(lat, 50)), f"tokens={toks}"),
+        (f"{row}_p99_us", float(np.percentile(lat, 99)), f"tokens={toks}"),
+    ]
+
+
+def bench_serve_load(quick=False):
+    """Poisson-arrival load over the paged engine across the config zoo:
+    requests arrive mid-flight with mixed prompt/output lengths, exercising
+    chunked prefill interleaved with decode, refcounted block-pool churn,
+    prefix sharing, async tick overlap, and admission head-room — the
+    production-traffic shapes the scheduler exists for.
+
+    Scenarios (each contributes ``*_tok_us``/``*_p50_us``/``*_p99_us``
+    rows, all gated in ``benchmarks/baseline.json``):
+
+    - ``serve_load`` — the llama3 70/30 short/long mix (the PR 6 rows),
+      now with prefix sharing + ``async_depth=2`` enabled and a 16-token
+      shared system prefix on every prompt; the acceptance gate that the
+      new machinery does not regress the existing mix.
+    - ``serve_load_mamba`` — the same mix on ``mamba2_130m``: prefix
+      sharing auto-disables (recurrent state cannot skip prompt tokens),
+      so this gates the async-overlap path on the SSM decode step.
+    - ``serve_load_moe`` — the mix on the ``llama4_scout_17b_a16e`` smoke
+      scale: routed-expert prefill/decode under paged serving.
+    - ``serve_load_burst`` — every request arrives at tick 0 (admission
+      pressure, head-room waits, same-tick admissions that cannot share).
+    - ``serve_load_flood`` — long-context flood: every prompt is 48–89
+      tokens against ``max_len=128``, maximal chunked-prefill pressure and
+      pool churn.
+    """
+    quick_n, full_n = (3, 5), (5, 12)
+    n_small = quick_n[0] if quick else full_n[0]
+    n_mix = quick_n[1] if quick else full_n[1]
+    rows = []
+    rows += _serve_load_scenario("llama3_8b", "serve_load", quick=quick,
+                                 nreq=n_mix, shared_len=16)
+    rows += _serve_load_scenario("mamba2_130m", "serve_load_mamba",
+                                 quick=quick, nreq=n_small, shared_len=16)
+    rows += _serve_load_scenario("llama4_scout_17b_a16e", "serve_load_moe",
+                                 quick=quick, nreq=n_small, shared_len=16)
+    rows += _serve_load_scenario("llama3_8b", "serve_load_burst",
+                                 quick=quick, nreq=n_mix, arrival_scale=0,
+                                 shared_len=16)
+    rows += _serve_load_scenario(
+        "llama3_8b", "serve_load_flood", quick=quick, nreq=n_small,
+        arrival_scale=1.0, max_new_hi=9,
+        plen_fn=lambda r: int(r.integers(48, 90)))
+    return rows
+
+
+def bench_serve_prefix_hit(quick=False):
+    """Prefix-sharing payoff: N requests sharing an 80% prompt prefix vs
+    the same N with disjoint prompts, on the llama3 smoke config with
+    ``prefix_sharing=True`` and ``async_depth=2``.
+
+    A leader request carrying the shared prefix drains first (its blocks
+    stay resident in the pool's prefix index after retirement), then the N
+    followers are submitted together.  Gated rows (``--strict`` in CI):
+
+    - ``serve_prefix_prefill_tok`` — prompt tokens actually computed for
+      the N shared-prefix followers (the number prefix sharing shrinks;
+      the run **asserts ≥ 2x reduction** vs the disjoint control).
+    - ``serve_prefix_p50_us`` / ``serve_prefix_p99_us`` — per-token
+      latency of the shared-prefix run (each token charged its tick's
+      wall time), so CoW copies and index upkeep cannot silently eat the
+      tokens they save.
+    """
+    from repro.artifacts.dispatch import (DispatchCache, get_default_cache,
+                                          set_default_cache)
+    from repro.configs import get_smoke_config
+    from repro.models import init_model
+    from repro.runtime import ServeEngine
+    cfg = get_smoke_config("llama3_8b")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    nreq = 4 if quick else 8
+    plen, shared_frac = 40, 0.8
+    shared_n = int(plen * shared_frac)
+
+    def drive(shared):
+        rng = np.random.default_rng(0)
+        eng = ServeEngine(cfg, params, max_batch=4, max_len=128,
+                          page_size=16, prefill_chunk=16,
+                          prefix_sharing=True, async_depth=2,
+                          warm_kernels=True)
+        # warmup compiles every chunk shape; drop whatever it cached so
+        # both runs start from an identical (empty) prefix index
+        eng.submit(rng.integers(0, cfg.vocab, 31), max_new=2)
+        eng.run_until_drained()
+        eng.pool.release_prefix_cache()
+        prefix = rng.integers(0, cfg.vocab, shared_n)
+        eng.submit(np.concatenate([prefix,
+                                   rng.integers(0, cfg.vocab,
+                                                plen - shared_n)]),
+                   max_new=4)
+        eng.run_until_drained()              # leader: populates the index
+        st0 = eng.sched.stats.prefill_tokens
+        for _ in range(nreq):
+            head = (prefix if shared
+                    else rng.integers(0, cfg.vocab, shared_n))
+            eng.submit(np.concatenate(
+                [head, rng.integers(0, cfg.vocab, plen - shared_n)]),
+                max_new=8)
+        per_token, done, tick = [], [], 0
+        while len(done) < nreq and tick < 10_000:
+            before = sum(len(s.req.out) for s in eng.sched.running())
+            t0 = time.perf_counter()
+            finished = eng.step()
+            dt = (time.perf_counter() - t0) * 1e6
+            after = sum(len(s.req.out) for s in eng.sched.running()) \
+                + sum(len(r.out) for r in finished)
+            per_token.extend([dt] * max(0, after - before))
+            done.extend(finished)
+            eng.pool.check_invariants(
+                [s.blocks for s in eng.sched.running()])
+            tick += 1
+        assert len(done) == nreq
+        return (eng.sched.stats.prefill_tokens - st0,
+                np.asarray(per_token), eng.pool.stats)
+
+    prior = get_default_cache()
+    set_default_cache(DispatchCache())
+    try:
+        disjoint_toks, _, _ = drive(shared=False)
+        shared_toks, lat, pst = drive(shared=True)
+    finally:
+        set_default_cache(prior)
+    reduction = disjoint_toks / max(shared_toks, 1)
+    assert reduction >= 2.0, (
+        f"prefix sharing saved too little prefill: {shared_toks} tokens "
+        f"computed vs {disjoint_toks} disjoint ({reduction:.2f}x < 2x)")
+    meta = (f"disjoint={disjoint_toks}tok reduction={reduction:.1f}x "
+            f"hits={pst.prefix_hits} saved={pst.prefix_tokens_saved} "
+            f"cow={pst.cow_copies}")
+    return [
+        ("serve_prefix_prefill_tok", float(shared_toks), meta),
+        ("serve_prefix_p50_us", float(np.percentile(lat, 50)),
+         f"requests={nreq}"),
+        ("serve_prefix_p99_us", float(np.percentile(lat, 99)),
+         f"requests={nreq}"),
     ]
 
 
@@ -487,6 +633,7 @@ BENCH_GROUPS = (
     ("warm", bench_warm_dispatch),
     ("serve", bench_serve_decode),
     ("load", bench_serve_load),
+    ("prefix", bench_serve_prefix_hit),
     ("plan", bench_plan_load),
     ("compile", bench_compile_sweep),
     ("tuning", bench_tuning_sweep),

@@ -1,7 +1,8 @@
 #!/usr/bin/env python
 """Gate CI on benchmark regressions against a committed baseline.
 
-Compares a ``benchmarks/run.py --json`` output file against
+Compares one or more ``benchmarks/run.py --json`` output files (rows are
+merged; later files win name collisions) against
 ``benchmarks/baseline.json`` and exits non-zero when a gated row regresses
 by more than ``--max-ratio`` (wall-time ratio, default 2.0).  Both missing
 directions fail loudly:
@@ -11,10 +12,12 @@ directions fail loudly:
 - with ``--strict``, a measured row with no baseline counterpart — a new
   benchmark that nobody gates silently stops being a perf trajectory.
 
-Rows faster than the baseline print an invitation to ratchet the committed
+On failure the summary names the worst-ratio row, so the offender is
+visible straight from the CI log instead of a by-hand JSON diff.  Rows
+faster than the baseline print an invitation to ratchet the committed
 number down.
 
-    python scripts/check_bench.py BENCH_dispatch.json \
+    python scripts/check_bench.py BENCH_dispatch.json BENCH_serve_load.json \
         --baseline benchmarks/baseline.json \
         --key dispatch_cold_matmul --max-ratio 2.0 --strict
 """
@@ -25,15 +28,20 @@ import json
 import sys
 
 
-def load_rows(path: str) -> dict:
-    with open(path) as f:
-        payload = json.load(f)
-    return {row["name"]: row for row in payload.get("rows", [])}
+def load_rows(paths) -> dict:
+    rows: dict = {}
+    for path in paths:
+        with open(path) as f:
+            payload = json.load(f)
+        rows.update({row["name"]: row for row in payload.get("rows", [])})
+    return rows
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
-    ap.add_argument("measured", help="JSON file from benchmarks/run.py --json")
+    ap.add_argument("measured", nargs="+",
+                    help="JSON file(s) from benchmarks/run.py --json "
+                         "(rows merged; later files win collisions)")
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--key", action="append", default=None,
                     help="row name to gate (repeatable; default: every key "
@@ -52,6 +60,7 @@ def main(argv=None) -> int:
     keys = args.key if args.key else sorted(baseline.get("rows", {}))
 
     failures = 0
+    worst = None                           # (ratio, key, us, base_us)
     for key in keys:
         base = baseline.get("rows", {}).get(key)
         if base is None:
@@ -61,12 +70,14 @@ def main(argv=None) -> int:
             continue
         row = measured.get(key)
         if row is None:
-            print(f"[GATE FAIL] {key}: missing from {args.measured} "
+            print(f"[GATE FAIL] {key}: missing from measured file(s) "
                   f"(benchmark did not run?)", file=sys.stderr)
             failures += 1
             continue
         us, base_us = float(row["us"]), float(base["us"])
         ratio = us / base_us if base_us > 0 else float("inf")
+        if worst is None or ratio > worst[0]:
+            worst = (ratio, key, us, base_us)
         if ratio > args.max_ratio:
             print(f"[GATE FAIL] {key}: {us:.1f}us vs baseline "
                   f"{base_us:.1f}us ({ratio:.2f}x > {args.max_ratio:.2f}x)",
@@ -85,6 +96,10 @@ def main(argv=None) -> int:
                   f"{args.baseline} (add a baseline row so it stays gated)",
                   file=sys.stderr)
             failures += 1
+    if failures and worst is not None:
+        print(f"[GATE WORST] {worst[1]}: {worst[2]:.1f}us vs baseline "
+              f"{worst[3]:.1f}us ({worst[0]:.2f}x) — the biggest measured "
+              f"ratio this run", file=sys.stderr)
     return 1 if failures else 0
 
 

@@ -37,6 +37,15 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="max tokens prefilled per engine tick (chunked "
                          "prefill; tails quantize to powers of two)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="map page-aligned prompt blocks already resident "
+                         "in the pool (refcounted, copy-on-write) instead "
+                         "of re-prefilling them; auto-disabled for "
+                         "SSM-bearing configs")
+    ap.add_argument("--async-depth", type=int, default=1,
+                    help="engine pipeline depth: 1 = synchronous, 2 = plan "
+                         "tick t+1 on the host while the device executes "
+                         "tick t (commit barrier before the next dispatch)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--warm-kernels", action="store_true",
                     help="pre-resolve kernel-variant dispatch at engine "
@@ -59,6 +68,8 @@ def main() -> None:
                       max_len=args.max_len, page_size=args.block_size,
                       num_blocks=args.num_blocks,
                       prefill_chunk=args.prefill_chunk,
+                      prefix_sharing=args.prefix_sharing,
+                      async_depth=args.async_depth,
                       warm_kernels=args.warm_kernels,
                       plan_store=plan_store)
     if eng.kernel_plan:
@@ -77,11 +88,18 @@ def main() -> None:
     for r in done[:4]:
         print(f"req {r.rid}: {r.out}")
     st = eng.sched.stats
+    pst = eng.pool.stats
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s); pool {eng.pool.capacity} blocks x "
-          f"{eng.page_size} tokens, peak_live={eng.pool.stats.peak_live}, "
+          f"{eng.page_size} tokens, peak_live={pst.peak_live}, "
           f"prefill_chunks={st.prefill_chunks}, "
+          f"prefill_tokens={st.prefill_tokens}, "
           f"preemptions={st.preemptions}, waits={st.admission_waits}")
+    if eng.prefix_sharing:
+        print(f"prefix sharing: hits={pst.prefix_hits} blocks, "
+              f"tokens_saved={pst.prefix_tokens_saved}, "
+              f"cow_copies={pst.cow_copies}, "
+              f"cache_evictions={pst.cache_evictions}")
 
 
 if __name__ == "__main__":

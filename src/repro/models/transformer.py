@@ -484,6 +484,27 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, page_size: int,
     return c
 
 
+def paged_copy_block(cache: Dict[str, jax.Array], src: jax.Array,
+                     dst: jax.Array) -> Dict[str, jax.Array]:
+    """Copy-on-write duplication: copy physical KV block ``src`` into
+    ``dst`` across every layer, for both K and V pool leaves.
+
+    The serving engine calls this before a tick writes into a block whose
+    refcount is above one (prefix-shared with another sequence or pinned
+    by the prefix index): the writer gets a private copy, other owners
+    keep reading the original.  Per-slot SSM state is not paged and never
+    shared, so only the block-pool leaves move.  ``src``/``dst`` are
+    scalar block ids — shape-stable, so the jit'd copy compiles once.
+    """
+    out = dict(cache)
+    for key in ("k", "v"):
+        if key in cache:
+            out[key] = cache[key].at[:, dst].set(
+                jax.lax.dynamic_index_in_dim(cache[key], src, axis=1,
+                                             keepdims=False))
+    return out
+
+
 def paged_prefill_chunk(params: Params, cfg: ModelConfig, tokens: jax.Array,
                         cache: Dict[str, jax.Array], cache_index: jax.Array,
                         block_table: jax.Array, slot: jax.Array, *,

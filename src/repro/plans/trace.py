@@ -94,7 +94,13 @@ def _step_requests(cfg: ModelConfig, *, tokens: int, prefix: str,
     ``page_size > 0`` is the paged-KV serve path: the attention gather
     extent is the block grid (``ceil(seq/page_size)·page_size``), so the
     attention-core bucket keys carry the block size (a ``max_len`` already
-    on the grid traces identically to the dense path)."""
+    on the grid traces identically to the dense path).  Prefix sharing and
+    copy-on-write add **no** shapes to this set: a prefix-mapped sequence
+    still dispatches the same block-grid attention extents and quantized
+    chunk widths (only *which* chunks run changes), and the CoW block copy
+    is a scalar-indexed cache update, not a traced kernel op — so a frozen
+    serve plan stays exhaustive with ``prefix_sharing`` on
+    (``tests/test_plans.py`` asserts cold_builds == 0)."""
     d, hd = cfg.d_model, cfg.hd
     seq = seq if seq is not None else tokens
     has_attn = cfg.block in ("attn_mlp", "attn_moe", "hybrid")

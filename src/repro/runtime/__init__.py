@@ -2,12 +2,12 @@
 from .steps import (build_eval_step, build_serve_steps, build_train_step,
                     cross_entropy, greedy_sample, loss_fn)
 from .ft import StragglerMonitor, TrainController, elastic_mesh_shape
-from .kv_pool import GARBAGE_BLOCK, PagedKVPool, PoolStats
+from .kv_pool import GARBAGE_BLOCK, PREFIX_ROOT, PagedKVPool, PoolStats
 from .scheduler import Request, Scheduler, SeqState, TickPlan
 from .serving import ServeEngine, warm_kernel_dispatch
 
 __all__ = ["build_eval_step", "build_serve_steps", "build_train_step",
            "cross_entropy", "greedy_sample", "loss_fn", "StragglerMonitor",
            "TrainController", "elastic_mesh_shape", "GARBAGE_BLOCK",
-           "PagedKVPool", "PoolStats", "Request", "Scheduler", "SeqState",
-           "TickPlan", "ServeEngine", "warm_kernel_dispatch"]
+           "PREFIX_ROOT", "PagedKVPool", "PoolStats", "Request", "Scheduler",
+           "SeqState", "TickPlan", "ServeEngine", "warm_kernel_dispatch"]

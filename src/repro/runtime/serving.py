@@ -1,4 +1,5 @@
-"""Paged serving engine: block KV pool + chunked prefill + async scheduler.
+"""Paged serving engine: refcounted block KV pool + chunked prefill +
+prefix sharing + async plan/execute/commit tick overlap.
 
 A minimal-but-real engine in the vLLM mold, sized for the dry-run shapes:
 
@@ -6,8 +7,17 @@ A minimal-but-real engine in the vLLM mold, sized for the dry-run shapes:
   fixed-size blocks (:class:`repro.runtime.kv_pool.PagedKVPool` owns the
   accounting, :func:`repro.models.init_paged_cache` the device layout).
   A request owns ``ceil(tokens / page_size)`` blocks listed in its block
-  table; retirement returns them to the free list copy-free.  KV memory
-  scales with *live tokens*, not ``max_batch × max_len``.
+  table; retirement drops refcounts copy-free.  KV memory scales with
+  *live tokens*, not ``max_batch × max_len``.
+* **prefix sharing (copy-on-write)** — with ``prefix_sharing=True`` the
+  pool indexes full ``page_size``-aligned prompt blocks by chain hash; a
+  request whose prompt shares a prefix with a live or recently-retired
+  sequence *maps* the resident blocks (refcount up, prefill skipped) and
+  only computes the tail.  A write into a shared block first duplicates
+  it device-side (:func:`repro.models.paged_copy_block`) — the scheduler
+  plans the copy, :meth:`ServeEngine._dispatch` executes it before the
+  tick's prefill/decode.  Recurrent SSM state cannot skip prompt tokens,
+  so sharing is forced off for SSM-bearing configs (``ssm``/``hybrid``).
 * **chunked prefill** — prompts enter the cache one scheduler-visible
   chunk per tick, interleaved with decode, so a long prompt never stalls
   in-flight decodes for its whole length.  Chunk lengths are quantized
@@ -15,28 +25,42 @@ A minimal-but-real engine in the vLLM mold, sized for the dry-run shapes:
   prefill-shape set is O(log ``prefill_chunk``), with no padding — the
   recurrent SSM state threads exactly and chunked prefill is token-for-
   token equal to whole-prompt prefill.
-* **host-side scheduler** — :class:`repro.runtime.scheduler.Scheduler`
-  makes every decision (FIFO admission under a free-block budget,
-  decode-priority, preemption-by-eviction with recompute);
-  :meth:`ServeEngine.step` only executes the returned tick plan.
+* **async tick overlap** — each engine step is **plan → dispatch →
+  commit**.  Dispatch enqueues the tick's jit'd closures and keeps the
+  sampled tokens *on device* (``last_tok`` chains device-resident into
+  the next dispatch), so with ``async_depth=2`` the host plans and
+  dispatches tick *t+1* while the device still executes tick *t*; the
+  only host synchronization is the commit barrier, which materializes a
+  finished tick's sampled tokens, appends them to request outputs, and
+  reconciles EOS/``max_new`` truncation *before the next dispatch*.
+  ``async_depth=1`` commits each tick immediately after dispatch — the
+  fully synchronous engine.  Speculation is bounded host-side: the
+  scheduler's dispatch guard never sends a sequence past its ``max_new``
+  budget, preempted sequences are marked dead so their uncommitted
+  in-flight tokens are dropped (greedy recompute regenerates them
+  deterministically), and tokens past an EOS are truncated at commit.
 
 The compiled steps are shape-stable — decode is (B, 1) tokens + (B, nblk)
 block tables every tick; prefill compiles one variant per quantized chunk
-length — so serving never recompiles after warmup.
+length; the CoW block copy is one scalar-indexed kernel — so serving
+never recompiles after warmup.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.params import MachineDescription, TPU_V5E
-from ..models import init_paged_cache, paged_decode_step, paged_prefill_chunk
+from ..models import (init_paged_cache, paged_copy_block, paged_decode_step,
+                      paged_prefill_chunk)
 from ..models.config import ModelConfig
 from .kv_pool import GARBAGE_BLOCK, PagedKVPool
-from .scheduler import Request, Scheduler, SeqState
+from .scheduler import Request, Scheduler, SeqState, TickPlan
 from .steps import greedy_sample
 
 PyTree = Any
@@ -122,6 +146,17 @@ def warm_kernel_dispatch(cfg: ModelConfig, *,
     return picks
 
 
+@dataclass
+class _InFlight:
+    """One dispatched-but-uncommitted tick: the device handles of its
+    sampled tokens plus the sequences they belong to.  Committing it is
+    the pipeline's only host sync."""
+
+    prefill_seed: Optional[Tuple[SeqState, jax.Array]] = None  # (seq, (1,1))
+    decode_toks: Optional[jax.Array] = None                    # (B, 1)
+    decode_seqs: List[SeqState] = field(default_factory=list)
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
                  max_batch: int = 8, max_len: int = 512,
@@ -129,17 +164,27 @@ class ServeEngine:
                  num_blocks: Optional[int] = None,
                  prefill_chunk: int = 32,
                  watermark_blocks: Optional[int] = None,
+                 prefix_sharing: bool = False,
+                 async_depth: int = 1,
                  warm_kernels: bool = False,
                  plan_store: Any = None,
                  machine: MachineDescription = TPU_V5E):
         if cfg.encoder is not None:
             raise ValueError("ServeEngine does not serve encoder-decoder "
                              "configs")
+        if async_depth < 1:
+            raise ValueError(f"async_depth must be >= 1: {async_depth}")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.page_size = page_size
+        self.async_depth = async_depth
+        # prompt-skipping needs every skipped position recoverable from the
+        # KV pool alone; SSM recurrent state must thread through *every*
+        # prompt token, so SSM-bearing configs always prefill in full
+        self.prefix_sharing = prefix_sharing and cfg.block not in (
+            "ssm", "hybrid")
         self.blocks_per_seq = -(-max_len // page_size)
         if num_blocks is None:
             # default pool: every slot can hold a full-length sequence
@@ -159,21 +204,34 @@ class ServeEngine:
         self.pool = PagedKVPool(num_blocks, page_size)
         self.sched = Scheduler(self.pool, max_batch=max_batch,
                                max_len=max_len, prefill_chunk=prefill_chunk,
-                               watermark_blocks=watermark_blocks)
+                               watermark_blocks=watermark_blocks,
+                               prefix_sharing=self.prefix_sharing)
 
         def _prefill(params, tokens, cache, start, block_table, slot):
-            return paged_prefill_chunk(params, cfg, tokens, cache, start,
-                                       block_table, slot)
+            logits, cache = paged_prefill_chunk(params, cfg, tokens, cache,
+                                                start, block_table, slot)
+            # sample in-jit: the seed token stays device-resident until the
+            # commit barrier materializes it
+            return greedy_sample(logits), cache
 
-        def _decode(params, tokens, cache, index, block_tables, ssm_mask):
-            return paged_decode_step(params, cfg, tokens, cache, index,
-                                     block_tables, ssm_mask=ssm_mask)
+        def _decode(params, last_tok, cache, index, block_tables, mask):
+            logits, cache = paged_decode_step(params, cfg, last_tok, cache,
+                                              index, block_tables,
+                                              ssm_mask=mask)
+            nxt = greedy_sample(logits)
+            # chain last_tok device-side: decoding rows advance to their
+            # sampled token, everything else (dead rows, mid-prefill rows)
+            # keeps its value — no host sync between ticks
+            return nxt, jnp.where(mask[:, None], nxt, last_tok), cache
 
-        # one compile per quantized chunk length; decode is shape-stable
+        # one compile per quantized chunk length; decode + CoW copy are
+        # shape-stable
         self._prefill = jax.jit(_prefill, donate_argnums=(2,))
         self._decode = jax.jit(_decode, donate_argnums=(2,))
+        self._copy = jax.jit(paged_copy_block, donate_argnums=(0,))
         self.cache = init_paged_cache(cfg, num_blocks, page_size, max_batch)
-        self.last_tok = np.zeros((max_batch, 1), np.int32)
+        self.last_tok = jnp.zeros((max_batch, 1), jnp.int32)
+        self._inflight: Deque[_InFlight] = collections.deque()
         self._rid = 0
 
     # -- client API -----------------------------------------------------------
@@ -197,20 +255,41 @@ class ServeEngine:
         # KV needs no wipe — stale blocks are position-masked until their
         # next owner overwrites them — but the recurrent SSM state is
         # per-slot and must start from zero for a new occupant.
-        self.last_tok[slot] = 0
+        self.last_tok = self.last_tok.at[slot].set(0)
         if "ssm" in self.cache:
             self.cache["ssm"] = self.cache["ssm"].at[:, slot].set(0.0)
 
     def step(self) -> List[Request]:
-        """One engine tick: execute the scheduler's plan (admit slots,
-        one prefill chunk, batched decode), then retire."""
-        plan = self.sched.tick()
+        """One engine tick: plan + dispatch the next tick, then commit the
+        oldest in-flight tick(s) down to the pipeline depth.  At
+        ``async_depth=1`` the dispatched tick commits immediately
+        (synchronous engine); at depth ``d`` the newest ``d − 1`` ticks
+        stay in flight across the return, overlapping host planning with
+        device execution."""
+        self._dispatch(self.sched.tick())
+        done: List[Request] = []
+        while len(self._inflight) > self.async_depth - 1:
+            done.extend(self._commit(self._inflight.popleft()))
+        return done
+
+    def _dispatch(self, plan: TickPlan) -> None:
+        """Execute one tick plan: enqueue the CoW copies, at most one
+        prefill chunk, and the batched decode; record the device handles
+        of the sampled tokens as an in-flight tick.  No host sync here —
+        position accounting advances speculatively (note_prefill /
+        note_decode), outputs land at commit."""
         for seq in plan.admitted:
             self._reset_slot(seq.slot)
+        for src, dst in plan.cow:
+            # duplicate shared blocks BEFORE this tick writes into them;
+            # other owners keep reading the original
+            self.cache = self._copy(self.cache, jnp.int32(src),
+                                    jnp.int32(dst))
+        rec = _InFlight()
         if plan.prefill is not None:
             seq, start, chunk = plan.prefill
             toks = jnp.asarray(seq.target[None, start:start + chunk])
-            logits, self.cache = self._prefill(
+            seed, self.cache = self._prefill(
                 self.params, toks, self.cache, jnp.int32(start),
                 jnp.asarray(self._block_table(seq)[None]),
                 jnp.int32(seq.slot))
@@ -218,9 +297,8 @@ class ServeEngine:
             if not seq.prefilling:
                 # final chunk: its last-token logits seed decode, exactly
                 # as whole-prompt prefill would
-                nxt = np.asarray(greedy_sample(logits))      # (1, 1)
-                self.last_tok[seq.slot] = nxt[0]
-                seq.req.out.append(int(nxt[0, 0]))
+                self.last_tok = self.last_tok.at[seq.slot].set(seed[0])
+                rec.prefill_seed = (seq, seed)
         if plan.decode:
             bts = np.full((self.max_batch, self.blocks_per_seq),
                           GARBAGE_BLOCK, np.int32)
@@ -233,14 +311,32 @@ class ServeEngine:
             # one decode for the whole pool with per-row block tables
             # (continuous batching); non-decoding rows write the garbage
             # block and keep their SSM state via the mask.
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(self.last_tok), self.cache,
+            toks, self.last_tok, self.cache = self._decode(
+                self.params, self.last_tok, self.cache,
                 jnp.asarray(idx), jnp.asarray(bts), jnp.asarray(mask))
-            nxt = np.asarray(greedy_sample(logits))
             for seq in plan.decode:
-                self.last_tok[seq.slot] = nxt[seq.slot]
-                seq.req.out.append(int(nxt[seq.slot, 0]))
                 self.sched.note_decode(seq)
+            rec.decode_toks = toks
+            rec.decode_seqs = list(plan.decode)
+        self._inflight.append(rec)
+
+    def _commit(self, rec: _InFlight) -> List[Request]:
+        """Commit barrier: materialize one finished tick's sampled tokens
+        (the pipeline's only host sync), append them to request outputs —
+        skipping sequences preempted (dead: greedy recompute regenerates
+        their tokens) or already finished (EOS found by an earlier commit:
+        later speculative tokens are discarded) — then reconcile EOS /
+        ``max_new`` and retire."""
+        if rec.prefill_seed is not None:
+            seq, seed = rec.prefill_seed
+            if not seq.dead and not seq.req.done:
+                seq.req.out.append(int(np.asarray(seed)[0, 0]))
+        if rec.decode_seqs:
+            nxt = np.asarray(rec.decode_toks)
+            for seq in rec.decode_seqs:
+                if seq.dead or seq.req.done:
+                    continue
+                seq.req.out.append(int(nxt[seq.slot, 0]))
         return self._retire()
 
     def _retire(self) -> List[Request]:
@@ -250,8 +346,8 @@ class ServeEngine:
                 continue
             req = seq.req
             if req.eos is not None and req.eos in req.out:
-                # stop at the first EOS; later speculative tokens (decode
-                # runs before retire) are truncated away
+                # stop at the first EOS; later speculative tokens are
+                # truncated away
                 req.out = req.out[:req.out.index(req.eos) + 1]
                 req.done = True
             elif len(req.out) >= req.max_new:
@@ -259,7 +355,7 @@ class ServeEngine:
                 req.done = True
             if req.done:
                 done.append(req)
-                self.sched.retire(seq)       # copy-free: blocks → free list
+                self.sched.retire(seq)       # copy-free: refcounts drop
         return done
 
     def run_until_drained(self, max_ticks: int = 1000) -> List[Request]:
@@ -268,4 +364,8 @@ class ServeEngine:
             finished.extend(self.step())
             if not self.sched.has_work():
                 break
+        # drain the pipeline: ticks still in flight when the queue empties
+        # (async_depth > 1) carry the final tokens of the last requests
+        while self._inflight:
+            finished.extend(self._commit(self._inflight.popleft()))
         return finished

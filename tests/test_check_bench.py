@@ -68,3 +68,38 @@ def test_explicit_key_missing_from_baseline_fails(files):
     baseline, measured = files
     assert check_bench.main([measured, "--baseline", baseline,
                              "--key", "nonexistent"]) == 1
+
+
+def test_multiple_measured_files_merge(tmp_path, files):
+    """The CI job measures dispatch-layer and serve-load rows into separate
+    JSON files; the gate merges them (later files win collisions)."""
+    baseline, _ = files
+    m1 = _write(tmp_path, "m1.json",
+                {"rows": [{"name": "cold", "us": 900, "derived": ""}]})
+    m2 = _write(tmp_path, "m2.json",
+                {"rows": [{"name": "warm", "us": 9, "derived": ""}]})
+    assert check_bench.main([m1, m2, "--baseline", baseline]) == 0
+    # either file alone leaves a baseline row unmeasured -> fail
+    assert check_bench.main([m1, "--baseline", baseline]) == 1
+    # collision: the later file's value wins (2500 would fail, 900 passes)
+    m3 = _write(tmp_path, "m3.json",
+                {"rows": [{"name": "cold", "us": 2500, "derived": ""}]})
+    assert check_bench.main([m3, m1, m2, "--baseline", baseline]) == 0
+
+
+def test_failure_names_worst_ratio_row(tmp_path, files, capsys):
+    """On failure the log must name the worst-ratio row — the offender is
+    visible straight from CI instead of a by-hand JSON diff."""
+    baseline, _ = files
+    measured = _write(tmp_path, "slow.json",
+                      {"rows": [{"name": "cold", "us": 2500, "derived": ""},
+                                {"name": "warm", "us": 80, "derived": ""}]})
+    assert check_bench.main([measured, "--baseline", baseline]) == 1
+    err = capsys.readouterr().err
+    assert "[GATE WORST] warm" in err        # 8.0x beats cold's 2.5x
+    # a passing run prints no worst-row line
+    ok = _write(tmp_path, "ok.json",
+                {"rows": [{"name": "cold", "us": 900, "derived": ""},
+                          {"name": "warm", "us": 9, "derived": ""}]})
+    assert check_bench.main([ok, "--baseline", baseline]) == 0
+    assert "[GATE WORST]" not in capsys.readouterr().err

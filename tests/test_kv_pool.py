@@ -1,9 +1,10 @@
 """KV pool + scheduler invariants: churn, admission head-room, preemption,
-starvation bound.  Pure host-side — no jax, no device work."""
+refcounted prefix sharing, starvation bound.  Pure host-side — no jax, no
+device work."""
 import numpy as np
 import pytest
 
-from repro.runtime.kv_pool import GARBAGE_BLOCK, PagedKVPool
+from repro.runtime.kv_pool import GARBAGE_BLOCK, PREFIX_ROOT, PagedKVPool
 from repro.runtime.scheduler import Request, Scheduler
 
 
@@ -81,6 +82,153 @@ def test_churn_1k_cycles_no_leaks():
     pool.check_invariants()
     assert pool.num_live == 0
     assert pool.num_free == pool.capacity
+
+
+# ---------------------------------------------------------------------------
+# Refcounts + prefix index
+# ---------------------------------------------------------------------------
+
+def test_refcounted_free_returns_block_only_at_zero():
+    pool = PagedKVPool(num_blocks=5, page_size=4)
+    got = pool.alloc(2)
+    pool.incref(got)                         # second owner
+    assert all(pool.is_shared(b) for b in got)
+    pool.free(got)                           # first owner drops
+    assert pool.num_live == 2                # still live: one owner left
+    assert pool.num_free == 2
+    pool.free(got)                           # last owner drops
+    assert pool.num_live == 0
+    assert pool.num_free == pool.capacity
+    with pytest.raises(ValueError):          # refcount can never go negative
+        pool.free(got)
+    with pytest.raises(ValueError):          # incref needs a live block
+        pool.incref([got[0]])
+
+
+def test_register_and_match_full_prefix():
+    pool = PagedKVPool(num_blocks=9, page_size=4)
+    toks = list(range(100, 112))             # 3 full blocks
+    got = pool.alloc(3)
+    h = PREFIX_ROOT
+    for i, b in enumerate(got):
+        h = pool.register_prefix(h, toks[i * 4:(i + 1) * 4], b)
+    # a longer prompt sharing all 3 blocks maps them and prefills the rest
+    blocks, matched, chash = pool.match_prefix(toks + [7, 8])
+    assert blocks == got and matched == 12 and chash == h
+    assert all(pool.is_shared(b) for b in got)
+    assert pool.stats.prefix_hits == 3
+    assert pool.stats.prefix_tokens_saved == 12
+    pool.free(blocks)                        # the mapper retires
+    pool.free(got)                           # the owner retires
+    assert pool.num_live == 3                # index pins keep them resident
+    assert pool.num_reclaimable == 3
+    pool.check_invariants()
+
+
+def test_match_prefix_caps_below_full_prompt():
+    """A prompt fully covered by the index must still prefill >= 1 token —
+    its last-position logits seed decode."""
+    pool = PagedKVPool(num_blocks=9, page_size=4)
+    toks = list(range(50, 58))               # 2 full blocks
+    got = pool.alloc(2)
+    h = pool.register_prefix(PREFIX_ROOT, toks[:4], got[0])
+    pool.register_prefix(h, toks[4:], got[1])
+    blocks, matched, chash = pool.match_prefix(toks)
+    assert matched == 7                      # capped at len - 1
+    assert blocks == got                     # block 2 still mapped (partial)
+    assert chash == h                        # chain covers full blocks only
+
+
+def test_match_prefix_partial_tail_block():
+    """Divergence mid-block: the best-overlap registered child block is
+    mapped too (its tail is wrong but masked off), so the mapper's first
+    write into it must CoW — is_shared says so."""
+    pool = PagedKVPool(num_blocks=9, page_size=4)
+    toks = [1, 2, 3, 4, 5, 6, 7, 8]
+    got = pool.alloc(2)
+    h = pool.register_prefix(PREFIX_ROOT, toks[:4], got[0])
+    pool.register_prefix(h, toks[4:], got[1])
+    # shares block 1 fully, then 2 of block 2's tokens, then diverges
+    blocks, matched, chash = pool.match_prefix([1, 2, 3, 4, 5, 6, 9, 9, 9])
+    assert blocks == got and matched == 6 and chash == h
+    assert pool.is_shared(got[1])
+    # no overlap at all: no mapping, miss counted
+    blocks, matched, _ = pool.match_prefix([9, 9, 9, 9])
+    assert blocks == [] and matched == 0
+    assert pool.stats.prefix_misses == 1
+
+
+def test_alloc_reclaims_idle_cached_blocks_lru():
+    """Cached prefix blocks nobody maps are free-in-waiting: alloc evicts
+    them (oldest first) instead of refusing; mapped blocks are protected."""
+    pool = PagedKVPool(num_blocks=5, page_size=2)
+    got = pool.alloc(4)                      # pool now empty
+    h1 = pool.register_prefix(PREFIX_ROOT, [1, 2], got[0])
+    pool.register_prefix(h1, [3, 4], got[1])
+    pool.register_prefix(PREFIX_ROOT, [5, 6], got[2])
+    pool.free(got)                           # owner gone; 3 cached + 1 free
+    assert pool.num_free == 1 and pool.num_reclaimable == 3
+    # map [1,2] so its block is protected from eviction
+    blocks, matched, _ = pool.match_prefix([1, 2, 9])
+    assert matched == 2
+    assert pool.alloc(3) is not None         # evicts the 2 idle cached
+    assert pool.stats.cache_evictions == 2
+    assert pool.num_reclaimable == 0
+    assert pool.alloc(1) is None             # mapped block is NOT evictable
+    pool.check_invariants()
+
+
+def test_check_invariants_block_table_disjoint_from_free_list():
+    pool = PagedKVPool(num_blocks=6, page_size=4)
+    table = pool.alloc(2)
+    pool.check_invariants(block_tables=[table])
+    stolen = table[0]
+    pool.free([stolen])                      # table entry now on free list
+    with pytest.raises(AssertionError, match="free"):
+        pool.check_invariants(block_tables=[table])
+    with pytest.raises(AssertionError, match="owners"):
+        # two tables claim the same block but its refcount is 1
+        pool.check_invariants(block_tables=[[table[1]], [table[1]]])
+
+
+def test_churn_1k_cycles_with_shared_prefixes():
+    """1k cycles interleaving plain alloc/free with prefix register /
+    match / retire: refcounts never go negative (free raises), the garbage
+    block is never refcounted, invariants (incl. block-table/free-list
+    disjointness) hold throughout, and dropping the index drains the pool
+    to exactly full — no leaked, minted, or lost blocks."""
+    pool = PagedKVPool(num_blocks=17, page_size=4)
+    rng = np.random.default_rng(3)
+    seqs = []                                # [(blocks, registered_count)]
+    for i in range(1000):
+        r = rng.random()
+        if r < 0.45:                         # admit: maybe map a prefix
+            toks = [int(t) for t in rng.integers(0, 3, 12)]
+            blocks, matched, h = pool.match_prefix(toks)
+            extra = pool.alloc(pool.blocks_for(12) - len(blocks))
+            if extra is None:
+                if blocks:
+                    pool.free(blocks)        # un-map: the admit failed
+            else:
+                blocks = blocks + extra
+                # register any full blocks not already covered
+                for bi in range(matched // 4, 3):
+                    h = pool.register_prefix(h, toks[bi * 4:bi * 4 + 4],
+                                             blocks[bi])
+                seqs.append(blocks)
+        elif seqs:                           # retire a random sequence
+            pool.free(seqs.pop(int(rng.integers(len(seqs)))))
+        if i % 50 == 0:
+            pool.check_invariants(block_tables=seqs)
+            assert GARBAGE_BLOCK not in pool._refs
+    for blocks in seqs:
+        pool.free(blocks)
+    pool.release_prefix_cache()
+    pool.check_invariants()
+    assert pool.num_live == 0
+    assert pool.num_free == pool.capacity
+    assert pool.stats.prefix_hits > 0        # the mix actually shared
+    assert pool.stats.cache_evictions > 0    # and actually reclaimed
 
 
 # ---------------------------------------------------------------------------
@@ -194,6 +342,32 @@ def test_chunk_lengths_are_quantized():
     allowed = {8, 4, 2, 1}                   # chunk + power-of-two tail
     assert set(chunks) <= allowed
     assert chunks[:3] == [8, 8, 8]
+
+
+def test_scheduler_prefix_sharing_skips_resident_prefill():
+    """Host-only end-to-end of the sharing policy: a second identical
+    prompt maps the retired first sequence's registered blocks, prefills
+    only the one un-mappable token (the decode seed), and CoWs the partial
+    tail block it writes into."""
+    pool = PagedKVPool(17, 4)
+    sched = Scheduler(pool, max_batch=2, max_len=64, prefill_chunk=8,
+                      prefix_sharing=True)
+    prompt = np.arange(24, dtype=np.int32)
+    sched.submit(Request(1, prompt.copy(), max_new=4))
+    _drive(sched)
+    tok0 = sched.stats.prefill_tokens
+    assert tok0 == 24                        # leader computed everything
+    assert pool.num_reclaimable == 6         # its 6 prompt blocks cached
+    sched.submit(Request(2, prompt.copy(), max_new=4))
+    finished = _drive(sched)
+    assert len(finished) == 1 and len(finished[0].out) == 4
+    # follower: 23 of 24 positions mapped, 1 computed, tail block CoW'd
+    assert sched.stats.prefill_tokens - tok0 == 1
+    assert pool.stats.prefix_tokens_saved == 23
+    assert pool.stats.cow_copies == 1
+    pool.release_prefix_cache()
+    pool.check_invariants()
+    assert pool.num_free == pool.capacity
 
 
 def test_starvation_bound():

@@ -392,6 +392,24 @@ def test_serve_engine_starts_from_shipped_plan(tmp_path):
         assert info["candidate"] == online_picks[label]["candidate"]
     assert len(cache.frozen_plan) == len(eng.kernel_plan)
 
+    # prefix sharing + async overlap add no shapes to the warm set (CoW is
+    # a scalar-indexed cache update, mapped prefills hit the same quantized
+    # chunk widths): serving a shared-prefix workload through the shipped
+    # plan stays at zero cold builds
+    import numpy as np
+    eng2 = ServeEngine(cfg, params, max_batch=2, max_len=128, page_size=16,
+                       prefix_sharing=True, async_depth=2,
+                       warm_kernels=True, plan_store=store)
+    rng = np.random.default_rng(0)
+    lead = rng.integers(0, cfg.vocab, 40)
+    eng2.submit(lead, max_new=4)
+    eng2.run_until_drained()
+    eng2.submit(np.concatenate([lead[:32],
+                                rng.integers(0, cfg.vocab, 6)]), max_new=4)
+    eng2.run_until_drained()
+    assert eng2.pool.stats.prefix_hits > 0
+    assert cache.stats.cold_builds == 0
+
 
 def test_warm_kernel_dispatch_falls_back_online_without_plan(tmp_path):
     """No plan artifact (or plan_store=False): traced online warm-up, and

@@ -1,0 +1,167 @@
+"""Prefix-sharing + copy-on-write + async tick overlap correctness.
+
+The contract under test: turning ``prefix_sharing`` or ``async_depth`` on
+must never change a single output token.  Shared-prefix requests map
+resident KV blocks instead of re-prefilling them — paged attention reads
+KV through block tables and masks by logical position, and block-aligned
+sharing preserves both token content and absolute positions, so mapped
+blocks are bit-identical to recomputed ones.  Writes into shared blocks
+go through device-side copy-on-write, so divergence after a shared prefix
+must never corrupt a sibling, and preempting the sequence that *wrote* a
+shared block must leave the survivor's mapped copy intact.
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models import init_model
+from repro.runtime import ServeEngine
+
+
+def _serve(cfg, params, prompts, *, max_new=6, eos=None, staged=True,
+           **eng_kw):
+    """Drive one engine over ``prompts``; ``staged`` drains the first
+    prompt (the leader) before submitting the rest, so followers admit
+    against a populated prefix index.  Returns (outputs in submit order,
+    engine)."""
+    eng = ServeEngine(cfg, params, **eng_kw)
+    outs = {}
+    rids = [eng.submit(prompts[0], max_new=max_new, eos=eos)]
+    if staged:
+        for r in eng.run_until_drained():
+            outs[r.rid] = r.out
+    for p in prompts[1:]:
+        rids.append(eng.submit(p, max_new=max_new, eos=eos))
+    for r in eng.run_until_drained():
+        outs[r.rid] = r.out
+    eng.pool.check_invariants([s.blocks for s in eng.sched.running()])
+    assert set(outs) == set(rids)
+    return [outs[r] for r in rids], eng
+
+
+def _shared_prefix_prompts(cfg, rng, *, n=3, shared=22, tail=6):
+    """A leader plus ``n`` followers sharing its first ``shared`` tokens;
+    22 % page_size(4) != 0 diverges mid-block, so followers map a partial
+    tail block and must CoW it."""
+    lead = rng.integers(0, cfg.vocab, shared + 2).astype(np.int32)
+    prompts = [lead]
+    for _ in range(n):
+        prompts.append(np.concatenate(
+            [lead[:shared], rng.integers(0, cfg.vocab, tail)]
+        ).astype(np.int32))
+    return prompts
+
+
+_ENG = dict(max_batch=4, max_len=64, page_size=4, prefill_chunk=8)
+
+
+def test_shared_prefix_parity_and_cow_dense():
+    """Sharing on == sharing off, token for token, with real prefix hits
+    and real CoW copies (mid-block divergence) — and both pipeline depths
+    agree."""
+    cfg = get_smoke_config("yi_6b")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = _shared_prefix_prompts(cfg, np.random.default_rng(0))
+    base, _ = _serve(cfg, params, prompts, prefix_sharing=False, **_ENG)
+    for depth in (1, 2):
+        got, eng = _serve(cfg, params, prompts, prefix_sharing=True,
+                          async_depth=depth, **_ENG)
+        assert got == base, f"async_depth={depth}"
+        assert eng.pool.stats.prefix_tokens_saved > 0
+        assert eng.pool.stats.cow_copies >= len(prompts) - 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["yi_6b", "mamba2_130m", "hymba_1p5b"])
+def test_shared_prefix_parity_across_families(arch):
+    """Dense shares; SSM-bearing configs (recurrent state cannot skip
+    prompt tokens) silently force sharing off — either way the outputs
+    must match the no-sharing engine exactly."""
+    cfg = get_smoke_config(arch)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = _shared_prefix_prompts(cfg, np.random.default_rng(1))
+    base, _ = _serve(cfg, params, prompts, prefix_sharing=False, **_ENG)
+    got, eng = _serve(cfg, params, prompts, prefix_sharing=True,
+                      async_depth=2, **_ENG)
+    assert got == base
+    if cfg.block in ("ssm", "hybrid"):
+        assert not eng.prefix_sharing
+        assert eng.pool.stats.prefix_hits == 0
+    else:
+        assert eng.pool.stats.prefix_hits > 0
+
+
+def test_divergence_after_shared_prefix_leaves_sibling_intact():
+    """Two concurrent followers of the same prefix diverge mid-block: each
+    CoWs its own copy of the partial tail block, so neither corrupts the
+    other (or the cached original — a third, later follower still maps a
+    pristine prefix)."""
+    cfg = get_smoke_config("yi_6b")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    prompts = _shared_prefix_prompts(cfg, rng, n=2)
+    late = np.concatenate(
+        [prompts[0][:22], rng.integers(0, cfg.vocab, 7)]).astype(np.int32)
+    base, _ = _serve(cfg, params, prompts + [late],
+                     prefix_sharing=False, **_ENG)
+    got, eng = _serve(cfg, params, prompts + [late],
+                      prefix_sharing=True, **_ENG)
+    assert got == base
+    assert eng.pool.stats.cow_copies >= 3
+
+
+def test_preempting_shared_block_holder_keeps_survivor_intact():
+    """A pool too tight for both sequences preempts the youngest while it
+    holds blocks mapped from the survivor's prefix chain; the survivor
+    (and the preempted request, recomputed after re-admission) must still
+    produce exactly the roomy pool's tokens."""
+    cfg = get_smoke_config("yi_6b")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    lead = rng.integers(0, cfg.vocab, 10).astype(np.int32)
+    follow = np.concatenate(
+        [lead[:8], rng.integers(0, cfg.vocab, 2)]).astype(np.int32)
+    kw = dict(max_batch=2, max_len=28, page_size=4, prefill_chunk=8,
+              prefix_sharing=True, watermark_blocks=0)
+    roomy, _ = _serve(cfg, params, [lead, follow], max_new=14,
+                      staged=False, num_blocks=100, **kw)
+    tight, eng = _serve(cfg, params, [lead, follow], max_new=14,
+                        staged=False, num_blocks=9, **kw)
+    assert eng.sched.stats.preemptions > 0
+    assert tight == roomy
+    assert eng.pool.num_live == eng.pool.num_reclaimable  # only cache left
+
+
+def test_async_overlap_parity_with_eos_and_preemption():
+    """``async_depth=2`` (host plans tick t+1 while the device executes
+    tick t) must commit exactly the synchronous engine's outputs — with
+    EOS truncation reconciled at the commit barrier, and with in-flight
+    tokens of a preempted sequence discarded and regenerated."""
+    cfg = get_smoke_config("yi_6b")
+    params, _ = init_model(jax.random.PRNGKey(2), cfg)
+    # EOS: discover the greedy first token, then serve with it as EOS —
+    # depth 2 dispatches speculative tokens past it; commit must truncate
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=48)
+    eng.submit(np.arange(6), max_new=1)
+    first = eng.run_until_drained()[0].out[0]
+    for depth in (1, 2, 3):
+        e = ServeEngine(cfg, params, max_batch=2, max_len=48,
+                        async_depth=depth)
+        e.submit(np.arange(6), max_new=16, eos=first)
+        done = e.run_until_drained()
+        assert [r.out for r in done] == [[first]], f"async_depth={depth}"
+    # preemption under overlap: tight pool, uncommitted in-flight tokens
+    # of the victim must be dropped (dead), then regenerated exactly
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32)
+               for _ in range(2)]
+    kw = dict(max_batch=2, max_len=24, page_size=4, prefill_chunk=8,
+              watermark_blocks=0, staged=False)
+    roomy, _ = _serve(cfg, params, prompts, max_new=12, num_blocks=100,
+                      async_depth=1, **kw)
+    for depth in (1, 2):
+        tight, eng = _serve(cfg, params, prompts, max_new=12, num_blocks=7,
+                            async_depth=depth, **kw)
+        assert eng.sched.stats.preemptions > 0
+        assert tight == roomy, f"async_depth={depth}"
