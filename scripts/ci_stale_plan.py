@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""CI gate for the plan-staleness check (PR 8): prove BOTH exit paths.
+
+Takes an artifact root that already holds a serve plan AND the dispatch
+tables it was built against (the `plan_artifacts.py --out` from the
+preceding CI step), then:
+
+1. re-tunes one matmul bucket score in the dispatch table — the canonical
+   "somebody re-ran scripts/tune_artifacts.py after the plan was built"
+   drift scenario;
+2. asserts ``plan_artifacts.py --check`` reports STALE but still exits 0
+   (the warn path: serving falls back to online resolution);
+3. asserts ``plan_artifacts.py --check --strict`` exits NON-zero (the
+   refuse path: --strict-plans serving would abort at start);
+4. restores the original table bytes, so the artifact dir uploaded
+   afterwards is the real, fresh one.
+
+Exits non-zero if either path misbehaves.
+
+    python scripts/ci_stale_plan.py --out artifacts \
+        [--config llama3_8b] [--machine tpu_v5e]
+"""
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPTS = Path(__file__).resolve().parent
+
+
+def run_check(out: str, config: str, machine: str, *, strict: bool):
+    cmd = [sys.executable, str(SCRIPTS / "plan_artifacts.py"),
+           "--config", config, "--machine", machine, "--out", out,
+           "--check"] + (["--strict"] if strict else [])
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    return proc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", required=True,
+                    help="artifact root holding the plan + dispatch tables")
+    ap.add_argument("--config", default="llama3_8b")
+    ap.add_argument("--machine", default="tpu_v5e")
+    ap.add_argument("--family", default="matmul",
+                    help="family whose table gets deliberately re-tuned")
+    args = ap.parse_args(argv)
+
+    from repro.artifacts import ArtifactStore
+    store = ArtifactStore(args.out)
+    table = store.dispatch_path(args.family, args.machine)
+    if not table.exists():
+        print(f"[CI-STALE FAIL] no dispatch table at {table} — build "
+              f"artifacts before running this gate", file=sys.stderr)
+        return 1
+    original = table.read_bytes()
+
+    # drift: nudge one tuned score, exactly what a re-tune run would do
+    payload = store.load_dispatch(args.family, args.machine)
+    bucket = next(iter(payload["buckets"]))
+    payload["buckets"][bucket][0]["score"] = \
+        float(payload["buckets"][bucket][0]["score"]) + 1.0
+    store.save_dispatch(payload)
+
+    try:
+        warn = run_check(args.out, args.config, args.machine, strict=False)
+        if warn.returncode != 0:
+            print(f"[CI-STALE FAIL] warn-mode --check exited "
+                  f"{warn.returncode}, expected 0", file=sys.stderr)
+            return 1
+        if "[STALE]" not in warn.stdout:
+            print("[CI-STALE FAIL] warn-mode --check did not report STALE "
+                  "for a re-tuned table", file=sys.stderr)
+            return 1
+        strict = run_check(args.out, args.config, args.machine, strict=True)
+        if strict.returncode == 0:
+            print("[CI-STALE FAIL] strict-mode --check exited 0 for a "
+                  "stale plan, expected non-zero", file=sys.stderr)
+            return 1
+    finally:
+        table.write_bytes(original)
+
+    fresh = run_check(args.out, args.config, args.machine, strict=True)
+    if fresh.returncode != 0:
+        print("[CI-STALE FAIL] restored table still reads stale — "
+              "restore failed?", file=sys.stderr)
+        return 1
+    print("[CI-STALE OK] warn path exits 0, strict path refuses, "
+          "restore reads fresh")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,15 @@ online tree enumeration (``DispatchCache.stats.cold_builds == 0``).
         --machine tpu_v5e --out artifacts
     PYTHONPATH=src python scripts/plan_artifacts.py --config llama3_8b \
         --dry-run                                                  # CI smoke
+    PYTHONPATH=src python scripts/plan_artifacts.py --config llama3_8b \
+        --check [--strict]                    # staleness audit, no rebuild
+
+``--check`` audits shipped plans instead of building: each plan's recorded
+dispatch-table digests (PLAN_FORMAT_VERSION 3) are compared against the
+tables currently under the artifact root — the same comparison engine start
+performs.  Stale plans are reported; exit is 0 (warn mode, matching the
+engine's warn-and-fall-back default) unless ``--strict`` is given, which
+exits nonzero exactly like ``--strict-plans`` refuses to serve.
 """
 from __future__ import annotations
 
@@ -33,7 +42,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.artifacts import ArtifactStore, DispatchCache      # noqa: E402
 from repro.configs import ARCH_IDS, get_config, get_smoke_config  # noqa: E402
 from repro.core.params import MACHINES                         # noqa: E402
-from repro.plans import PlanStore, build_serve_plan, trace_warm_set  # noqa: E402
+from repro.plans import (PlanStore, build_serve_plan, plan_staleness,  # noqa: E402
+                         trace_warm_set)
 
 
 def main(argv=None) -> int:
@@ -64,6 +74,12 @@ def main(argv=None) -> int:
     ap.add_argument("--dry-run", action="store_true",
                     help="print each config's traced warm set without "
                          "resolving or writing anything (CI smoke)")
+    ap.add_argument("--check", action="store_true",
+                    help="audit shipped plans for digest staleness instead "
+                         "of building (see module docstring)")
+    ap.add_argument("--strict", action="store_true",
+                    help="with --check: exit nonzero on any stale plan "
+                         "(the --strict-plans refusal, offline)")
     args = ap.parse_args(argv)
 
     names = args.config if args.config else list(ARCH_IDS)
@@ -85,6 +101,35 @@ def main(argv=None) -> int:
                   f"({', '.join(f'{f}x{n}' for f, n in sorted(fams.items()))})")
             for op in traced:
                 print(f"           {op.label}  <- {', '.join(op.sites)}")
+        return 0
+
+    if args.check:
+        plan_store = PlanStore(args.out)
+        dispatch_store = ArtifactStore(args.out) if args.out else None
+        stale_count = 0
+        for machine in machines:
+            for cfg in cfgs:
+                plan = plan_store.load_plan(cfg.name, machine.name)
+                if plan is None:
+                    # unreadable/old-format plans read as a miss, never an
+                    # error — engine start would fall back to online warm-up
+                    print(f"[MISS] {cfg.name}/{machine.name}: no readable "
+                          f"v-current plan under {plan_store.root}")
+                    continue
+                stale = plan_staleness(plan, machine=machine,
+                                       store=dispatch_store)
+                if stale:
+                    stale_count += 1
+                    for fam, (rec, cur) in sorted(stale.items()):
+                        print(f"[STALE] {cfg.name}/{machine.name} {fam}: "
+                              f"plan={rec or 'none'} host={cur or 'none'}")
+                else:
+                    print(f"[FRESH] {cfg.name}/{machine.name}: "
+                          f"{len(plan.entries)} entries, digests match")
+        if stale_count:
+            print(f"{stale_count} stale plan(s); rebuild with "
+                  f"scripts/plan_artifacts.py", file=sys.stderr)
+            return 1 if args.strict else 0
         return 0
 
     # one cache per machine sweep: tree/table memos amortize across configs;

@@ -468,6 +468,18 @@ class DispatchCache:
         finally:
             self._recorder = prev
 
+    @property
+    def unfreeze_generation(self) -> int:
+        """Current unfreeze generation, for publish-if-unchanged races.
+
+        Capture before resolving a replacement plan off-lock, then pass to
+        ``freeze``/``freeze_resolved`` as ``_expect_unfreeze_gen``: if any
+        ``unfreeze``/``clear`` landed in between, the publish aborts and the
+        explicit drop wins (the ``attach_store`` re-freeze discipline; the
+        runtime monitor's hot-swap uses the same guard)."""
+        with self._lock:
+            return self._unfreeze_gen
+
     def unfreeze(self) -> None:
         """Drop the frozen plan; the locked tiers keep serving.
 

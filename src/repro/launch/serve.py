@@ -56,6 +56,25 @@ def main() -> None:
                     help="artifact root holding serve-plan artifacts "
                          "(scripts/plan_artifacts.py output; default: "
                          "$REPRO_ARTIFACT_DIR or ./artifacts)")
+    ap.add_argument("--strict-plans", action="store_true",
+                    help="refuse to start from a serve plan whose recorded "
+                         "dispatch-table digests no longer match this "
+                         "host's tables (default: warn and fall back to "
+                         "online warm-up)")
+    ap.add_argument("--monitor", action="store_true",
+                    help="adaptive loop: probe frozen kernel picks with "
+                         "cheap wall-clock timings during traffic and "
+                         "hot-swap any pick measurement persistently "
+                         "contradicts (requires --warm-kernels)")
+    ap.add_argument("--monitor-window", type=int, default=8,
+                    help="probes per decision window")
+    ap.add_argument("--monitor-every", type=int, default=4,
+                    help="engine ticks between probes")
+    ap.add_argument("--swap-threshold", type=float, default=1.25,
+                    help="challenger must beat the incumbent median by this "
+                         "ratio for a window to disagree")
+    ap.add_argument("--swap-patience", type=int, default=2,
+                    help="consecutive disagreeing windows before a hot-swap")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -71,7 +90,13 @@ def main() -> None:
                       prefix_sharing=args.prefix_sharing,
                       async_depth=args.async_depth,
                       warm_kernels=args.warm_kernels,
-                      plan_store=plan_store)
+                      plan_store=plan_store,
+                      strict_plans=args.strict_plans,
+                      monitor=args.monitor,
+                      monitor_window=args.monitor_window,
+                      monitor_every=args.monitor_every,
+                      swap_threshold=args.swap_threshold,
+                      swap_patience=args.swap_patience)
     if eng.kernel_plan:
         for name, info in eng.kernel_plan.items():
             print(f"kernel {name} [{info['rank_source']}]: "
@@ -100,6 +125,10 @@ def main() -> None:
               f"tokens_saved={pst.prefix_tokens_saved}, "
               f"cow_copies={pst.cow_copies}, "
               f"cache_evictions={pst.cache_evictions}")
+    if eng.monitor is not None:
+        print(eng.monitor.stats_line())
+        for ev in eng.monitor.events:
+            print(f"swap {ev.describe()}")
 
 
 if __name__ == "__main__":

@@ -24,13 +24,15 @@ Workflow: ``scripts/compile_artifacts.py`` → ``scripts/tune_artifacts.py``
 from .serde import PLAN_FORMAT_VERSION, PlanEntry, ServePlan
 from .store import PlanStore, resolve_env_store
 from .trace import TracedOp, op_label, record_warm_set, trace_warm_set
-from .loader import (apply_serve_plan, build_serve_plan, load_serve_plan,
-                     warm_from_plan)
+from .loader import (StalePlanError, StalePlanWarning, apply_serve_plan,
+                     build_serve_plan, load_serve_plan, plan_staleness,
+                     table_digest, warm_from_plan)
 
 __all__ = [
     "PLAN_FORMAT_VERSION", "PlanEntry", "ServePlan",
     "PlanStore", "resolve_env_store",
     "TracedOp", "op_label", "record_warm_set", "trace_warm_set",
+    "StalePlanError", "StalePlanWarning",
     "apply_serve_plan", "build_serve_plan", "load_serve_plan",
-    "warm_from_plan",
+    "plan_staleness", "table_digest", "warm_from_plan",
 ]

@@ -17,17 +17,83 @@ Online (``ServeEngine`` / ``repro.launch.serve`` at startup):
     ``max_len``, unknown family, uninstantiable candidate — returns ``None``
     and the caller falls back to online warm-up (cache-miss-never-error,
     the PR 1 artifact policy).
+
+Staleness (PLAN_FORMAT_VERSION 3):
+
+    A plan records, per resolved family, the digest of the dispatch table
+    its picks were resolved against (``table_digests``).  Re-tuning
+    (``scripts/tune_artifacts.py``) rewrites those tables in place, so a
+    shipped plan can silently pin a ranking the fleet no longer believes.
+    ``plan_staleness`` compares recorded digests against the tables the
+    serving host actually has; ``warm_from_plan`` treats a mismatch as a
+    *loud* cache miss — a :class:`StalePlanWarning` and online warm-up by
+    default, a :class:`StalePlanError` under ``strict=True`` (the engine's
+    ``--strict-plans``).  The distinction from the silent misses above is
+    deliberate: a stale plan is an operational bug (someone forgot to
+    re-plan after re-tuning), not a routine artifact rollover.
 """
 from __future__ import annotations
 
+import os
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
+from ..artifacts import serde as artifact_serde
 from ..artifacts.dispatch import DispatchCache, get_default_cache
+from ..artifacts.store import _DEFAULT_ROOT, _ENV_ROOT, ArtifactStore
 from ..core.params import MachineDescription, TPU_V5E
 from ..models.config import ModelConfig
 from .serde import PlanEntry, ServePlan
 from .store import PlanStore, resolve_env_store
 from .trace import TracedOp, trace_warm_set
+
+
+class StalePlanWarning(UserWarning):
+    """A serve plan's recorded dispatch-table digests no longer match the
+    tables on this host (someone re-tuned/recompiled under the plan)."""
+
+
+class StalePlanError(RuntimeError):
+    """Strict-mode refusal to start from a stale serve plan."""
+
+
+def table_digest(store: Optional[ArtifactStore], family_name: str,
+                 machine_name: str) -> str:
+    """Canonical digest of the dispatch table for (family, machine) in
+    ``store`` — ``""`` when no store / no (readable) table exists.  The
+    digest is over the canonical payload bytes, so any re-tune or
+    recompile that changes the ranking changes the digest."""
+    if store is None:
+        return ""
+    payload = store.load_dispatch(family_name, machine_name)
+    return artifact_serde.digest(payload) if payload is not None else ""
+
+
+def _resolve_dispatch_store() -> Optional[ArtifactStore]:
+    """Environment-resolved dispatch-artifact store (mirrors
+    ``artifacts.dispatch._resolve_env_store``)."""
+    root = os.environ.get(_ENV_ROOT, _DEFAULT_ROOT)
+    return ArtifactStore(root) if os.path.isdir(root) else None
+
+
+def plan_staleness(plan: ServePlan, *,
+                   machine: MachineDescription = TPU_V5E,
+                   store: Optional[ArtifactStore] = None
+                   ) -> Dict[str, Tuple[str, str]]:
+    """Families whose dispatch table changed since the plan was built.
+
+    Returns ``{family: (recorded_digest, current_digest)}`` for every
+    mismatch ("" = no table on that side).  Empty dict = the plan is
+    fresh.  ``store`` defaults to the environment-resolved artifact root —
+    the tables the serving host's dispatch tiers would actually consult."""
+    if store is None:
+        store = _resolve_dispatch_store()
+    out: Dict[str, Tuple[str, str]] = {}
+    for family, recorded in plan.table_digests:
+        current = table_digest(store, family, machine.name)
+        if current != recorded:
+            out[family] = (recorded, current)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -46,8 +112,11 @@ def build_serve_plan(cfg: ModelConfig, *,
     Resolution goes through the given cache's normal tiers, so building
     against a store holding compiled/tuned dispatch tables bakes their
     (measured) ranking into the plan — the ``rank_source`` per entry records
-    exactly that.  Triples with no feasible leaf at their shape are dropped
-    from the plan and returned separately for reporting."""
+    exactly that.  The digest of each family's dispatch table (or ``""``
+    when none existed) is recorded in ``table_digests`` so serving hosts
+    can detect when a later re-tune invalidated the picks
+    (:func:`plan_staleness`).  Triples with no feasible leaf at their shape
+    are dropped from the plan and returned separately for reporting."""
     from ..kernels.ops import FAMILIES
     cache = cache if cache is not None else get_default_cache()
     traced = trace_warm_set(cfg, max_len=max_len, page_size=page_size,
@@ -65,11 +134,18 @@ def build_serve_plan(cfg: ModelConfig, *,
         entries.append(PlanEntry(label=op.label, family=op.family,
                                  data=op.data, sites=op.sites,
                                  candidate=cand, rank_source=source))
+    # the staleness record: one digest per resolved family, taken from the
+    # same store the resolutions above consulted (possibly attached lazily
+    # by the cache's store resolver during those resolutions)
+    digests = tuple(
+        (f, table_digest(cache.store, f, machine.name))
+        for f in sorted({e.family for e in entries}))
     plan = ServePlan(config=cfg.name, machine=machine.name,
                      machine_bindings=dict(machine.bindings()),
                      max_len=max_len, page_size=page_size,
                      include_train=include_train,
-                     entries=tuple(entries))
+                     entries=tuple(entries),
+                     table_digests=digests)
     return plan, dropped
 
 
@@ -142,12 +218,42 @@ def warm_from_plan(cfg: ModelConfig, *,
                    machine: MachineDescription = TPU_V5E,
                    max_len: int = 512, page_size: int = 0,
                    store: Optional[PlanStore] = None,
-                   cache: Optional[DispatchCache] = None
+                   cache: Optional[DispatchCache] = None,
+                   strict: bool = False,
+                   dispatch_store: Optional[ArtifactStore] = None
                    ) -> Optional[Dict[str, Any]]:
-    """The plan-backed warm-up: load, validate, freeze.  ``None`` on any
-    miss — the caller (``warm_kernel_dispatch``) falls back online."""
+    """The plan-backed warm-up: load, validate, check staleness, freeze.
+    ``None`` on any miss — the caller (``warm_kernel_dispatch``) falls
+    back online.
+
+    Staleness is the one *loud* miss: when the plan's recorded dispatch-
+    table digests disagree with the tables on this host (``dispatch_store``,
+    default: the cache's attached store, else the environment-resolved
+    artifact root), the plan's frozen picks may no longer match what the
+    tiers would resolve.  Default: emit a :class:`StalePlanWarning` and
+    return ``None`` (online warm-up re-resolves against the fresh tables).
+    ``strict=True``: raise :class:`StalePlanError` — the engine's
+    ``--strict-plans`` refusal, for fleets where serving a pick the tuner
+    disowned must fail deployment rather than degrade silently."""
     plan = load_serve_plan(cfg, machine=machine, store=store,
                            max_len=max_len, page_size=page_size)
     if plan is None or not plan.entries:
         return None
+    if dispatch_store is None:
+        dispatch_store = (cache.store
+                          if cache is not None and cache.store is not None
+                          else _resolve_dispatch_store())
+    stale = plan_staleness(plan, machine=machine, store=dispatch_store)
+    if stale:
+        detail = ", ".join(
+            f"{fam} (plan={rec[:12] or 'none'} "
+            f"host={cur[:12] or 'none'})"
+            for fam, (rec, cur) in sorted(stale.items()))
+        msg = (f"serve plan for {cfg.name}/{machine.name} is STALE: "
+               f"dispatch tables changed under it for {detail}; "
+               f"rebuild with scripts/plan_artifacts.py")
+        if strict:
+            raise StalePlanError(msg)
+        warnings.warn(msg, StalePlanWarning, stacklevel=2)
+        return None                          # loud miss: online warm-up
     return apply_serve_plan(plan, machine=machine, cache=cache)

@@ -25,6 +25,15 @@ Version history:
       engine's attention bucket keys carry the KV block size, so a plan
       traced for one block size (or the dense layout, ``page_size=0``)
       must read as a miss for any other.
+  3 — ``table_digests`` (PR 8): per resolved kernel family, the digest of
+      the dispatch-table artifact the plan's picks were resolved against
+      (empty string = no table existed).  ``scripts/tune_artifacts.py``
+      rewrites dispatch tables in place, silently invalidating the frozen
+      picks of every plan built against the old ranking; the digests let
+      engine start *detect* that staleness (:func:`repro.plans.loader.
+      plan_staleness`) and warn — or refuse, under ``--strict-plans`` —
+      instead of serving stale picks quietly.  A v2 plan reads as a miss,
+      never an error, per the standing artifact policy.
 """
 from __future__ import annotations
 
@@ -35,7 +44,7 @@ from ..artifacts import serde as artifact_serde
 from ..artifacts.serde import ArtifactFormatError
 from ..core.select import Candidate
 
-PLAN_FORMAT_VERSION = 2
+PLAN_FORMAT_VERSION = 3
 
 _RANK_SOURCES = ("measured", "symbolic", "cold")
 
@@ -66,9 +75,15 @@ class ServePlan:
     page_size: int                           # paged KV block size (0 = dense)
     include_train: bool
     entries: Tuple[PlanEntry, ...]
+    #: family -> digest of the dispatch table the picks were resolved
+    #: against ("" = no table existed at build time); the staleness record
+    table_digests: Tuple[Tuple[str, str], ...] = ()
 
     def digest(self) -> str:
         return artifact_serde.digest(plan_to_obj(self))
+
+    def table_digest_map(self) -> Dict[str, str]:
+        return dict(self.table_digests)
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +148,7 @@ def plan_to_obj(plan: ServePlan) -> Dict[str, Any]:
         "max_len": int(plan.max_len),
         "page_size": int(plan.page_size),
         "include_train": bool(plan.include_train),
+        "table_digests": {k: str(v) for k, v in plan.table_digests},
         "entries": [entry_to_obj(e) for e in plan.entries],
     }
 
@@ -157,6 +173,8 @@ def obj_to_plan(obj: Mapping[str, Any]) -> ServePlan:
         page_size=int(obj["page_size"]),
         include_train=bool(obj["include_train"]),
         entries=tuple(obj_to_entry(e) for e in obj["entries"]),
+        table_digests=tuple(sorted((str(k), str(v)) for k, v
+                                   in obj["table_digests"].items())),
     )
 
 

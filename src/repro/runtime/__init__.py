@@ -1,13 +1,16 @@
-"""Runtime: step builders, fault tolerance, paged serving engine."""
+"""Runtime: step builders, fault tolerance, paged serving engine,
+adaptive kernel monitoring."""
 from .steps import (build_eval_step, build_serve_steps, build_train_step,
                     cross_entropy, greedy_sample, loss_fn)
 from .ft import StragglerMonitor, TrainController, elastic_mesh_shape
 from .kv_pool import GARBAGE_BLOCK, PREFIX_ROOT, PagedKVPool, PoolStats
+from .monitor import KernelMonitor, MonitorStats, SwapEvent, cand_key
 from .scheduler import Request, Scheduler, SeqState, TickPlan
 from .serving import ServeEngine, warm_kernel_dispatch
 
 __all__ = ["build_eval_step", "build_serve_steps", "build_train_step",
            "cross_entropy", "greedy_sample", "loss_fn", "StragglerMonitor",
            "TrainController", "elastic_mesh_shape", "GARBAGE_BLOCK",
-           "PREFIX_ROOT", "PagedKVPool", "PoolStats", "Request", "Scheduler",
+           "PREFIX_ROOT", "PagedKVPool", "PoolStats", "KernelMonitor",
+           "MonitorStats", "SwapEvent", "cand_key", "Request", "Scheduler",
            "SeqState", "TickPlan", "ServeEngine", "warm_kernel_dispatch"]

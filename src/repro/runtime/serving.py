@@ -44,6 +44,14 @@ The compiled steps are shape-stable — decode is (B, 1) tokens + (B, nblk)
 block tables every tick; prefill compiles one variant per quantized chunk
 length; the CoW block copy is one scalar-indexed kernel — so serving
 never recompiles after warmup.
+
+With ``monitor=True`` (and warmed kernels) the engine additionally runs
+the **adaptive loop** (:mod:`repro.runtime.monitor`): cheap wall-clock
+probes over the frozen kernel picks during live traffic, and an atomic
+hot-swap of any pick that measurement persistently contradicts —
+KLARAPTOR's runtime selection grafted onto the offline plan.  Plan-backed
+starts also digest-check their serve plan against the host's dispatch
+tables (``strict_plans`` escalates the staleness warning to a refusal).
 """
 from __future__ import annotations
 
@@ -60,6 +68,7 @@ from ..models import (init_paged_cache, paged_copy_block, paged_decode_step,
                       paged_prefill_chunk)
 from ..models.config import ModelConfig
 from .kv_pool import GARBAGE_BLOCK, PagedKVPool
+from .monitor import KernelMonitor
 from .scheduler import Request, Scheduler, SeqState, TickPlan
 from .steps import greedy_sample
 
@@ -71,7 +80,8 @@ def warm_kernel_dispatch(cfg: ModelConfig, *,
                          max_len: int = 512,
                          page_size: int = 0,
                          freeze: bool = True,
-                         plan_store: Any = None) -> Dict[str, Any]:
+                         plan_store: Any = None,
+                         strict_plans: bool = False) -> Dict[str, Any]:
     """Pre-resolve the kernel variants this model's serve path will ask for.
 
     Thin wrapper over :mod:`repro.plans`: the warm set is no longer a hand
@@ -90,7 +100,12 @@ def warm_kernel_dispatch(cfg: ModelConfig, *,
       ``REPRO_ARTIFACT_DIR``-resolved store when ``plan_store`` is ``None``
       — is fed straight to :meth:`DispatchCache.freeze_resolved`.  Zero
       online tree enumeration; ``stats.cold_builds`` stays 0.  Pass
-      ``plan_store=False`` to skip the artifact probe.
+      ``plan_store=False`` to skip the artifact probe.  A plan whose
+      recorded dispatch-table digests no longer match this host's tables
+      is *stale*: by default it warns (``StalePlanWarning``) and falls
+      through to online warm-up; ``strict_plans=True`` raises
+      :class:`repro.plans.StalePlanError` instead (the ``--strict-plans``
+      refusal).
     - **online fallback**: trace, resolve every triple through the tiers
       (triples infeasible at this config's shapes are dropped), and — with
       ``freeze=True`` (default) — snapshot them into the process cache's
@@ -116,7 +131,8 @@ def warm_kernel_dispatch(cfg: ModelConfig, *,
     if freeze and plan_store is not False:
         picks = warm_from_plan(cfg, machine=machine, max_len=max_len,
                                page_size=page_size,
-                               store=plan_store or None, cache=cache)
+                               store=plan_store or None, cache=cache,
+                               strict=strict_plans)
         if picks is not None:
             return picks
 
@@ -168,6 +184,13 @@ class ServeEngine:
                  async_depth: int = 1,
                  warm_kernels: bool = False,
                  plan_store: Any = None,
+                 strict_plans: bool = False,
+                 monitor: bool = False,
+                 monitor_window: int = 8,
+                 monitor_every: int = 4,
+                 swap_threshold: float = 1.25,
+                 swap_patience: int = 2,
+                 monitor_timer: Any = None,
                  machine: MachineDescription = TPU_V5E):
         if cfg.encoder is not None:
             raise ValueError("ServeEngine does not serve encoder-decoder "
@@ -199,8 +222,20 @@ class ServeEngine:
         self.kernel_plan = (warm_kernel_dispatch(cfg, machine=machine,
                                                  max_len=max_len,
                                                  page_size=page_size,
-                                                 plan_store=plan_store)
+                                                 plan_store=plan_store,
+                                                 strict_plans=strict_plans)
                             if warm_kernels else None)
+        # adaptive loop (repro.runtime.monitor): live counters over the
+        # frozen picks + hot-swap when measurement disagrees.  Off by
+        # default — probing runs real kernels; enable it with an injected
+        # timer (tests/benchmarks) or on hosts where probe cost is cheap.
+        self.monitor: Optional[KernelMonitor] = None
+        if monitor and self.kernel_plan is not None:
+            self.monitor = KernelMonitor(
+                machine=machine, window=monitor_window,
+                probe_every=monitor_every, threshold=swap_threshold,
+                patience=swap_patience, timer=monitor_timer)
+            self.monitor.track_frozen()
         self.pool = PagedKVPool(num_blocks, page_size)
         self.sched = Scheduler(self.pool, max_batch=max_batch,
                                max_len=max_len, prefill_chunk=prefill_chunk,
@@ -266,6 +301,11 @@ class ServeEngine:
         (synchronous engine); at depth ``d`` the newest ``d − 1`` ticks
         stay in flight across the return, overlapping host planning with
         device execution."""
+        if self.monitor is not None:
+            # adaptive loop: cheap counter sampling + (rarely) a hot-swap
+            # through the cache's atomic publish; one modulo check on
+            # non-probe ticks
+            self.monitor.on_tick(self.sched.ticks)
         self._dispatch(self.sched.tick())
         done: List[Request] = []
         while len(self._inflight) > self.async_depth - 1:

@@ -102,6 +102,101 @@ def test_concurrent_resolution_deterministic_and_accounted(tmp_path):
         == total_calls
 
 
+def test_warm_readers_safe_under_monitor_hot_swap():
+    """ISSUE 8 satellite: N threads reading ``warm_callable``/
+    ``best_variant`` while the adaptive monitor keeps re-freezing the
+    triple.  Every read must see exactly the old OR the new candidate
+    (byte-identical to one of the two, never torn), the callable must
+    never be None, and the locked-tier stats must not move at all — swap
+    publishes and frozen reads never touch the locked tiers."""
+    from repro.core.select import rank_candidates
+    from repro.runtime.monitor import KernelMonitor, cand_key
+
+    cache = DispatchCache()
+    fam, data = TRIPLES[2]                           # cold-resolvable triple
+    ranked = rank_candidates(fam, TPU_V5E, data)
+    a, b = ranked[0], ranked[1]
+    cache.freeze_resolved([(fam, TPU_V5E, data, a, "symbolic")])
+    legal = {_candidate_bytes(a), _candidate_bytes(b)}
+    locked_before = (cache.stats.memory_hits + cache.stats.disk_hits
+                     + cache.stats.cold_builds)
+
+    skew = {cand_key(a): 8e-3, cand_key(b): 1e-3}    # incumbent a looks slow
+
+    def timer(family, plan, assignment, d, cfg):
+        key = tuple(sorted((k, int(v)) for k, v in assignment.items()))
+        for (_, asg), secs in skew.items():
+            if asg == key:
+                return [secs]
+        return [4e-3]
+
+    mon = KernelMonitor(cache, machine=TPU_V5E, window=1, patience=1,
+                        probe_every=1, top_k=2, timer=timer, seed=0)
+    mon.track(fam, data)
+    stop = threading.Event()
+
+    def swapper(_):
+        t, seen = 0, 0
+        while not stop.is_set():
+            mon.on_tick(t)
+            t += 1
+            if mon.stats.swaps > seen:
+                seen = mon.stats.swaps
+                # flip the skew so the freshly-installed pick immediately
+                # looks wrong again: the monitor keeps re-freezing
+                cur = cache.frozen_entry(fam.name, TPU_V5E.name, data)
+                other = b if cand_key(cur.candidate) == cand_key(a) else a
+                skew[cand_key(cur.candidate)] = 8e-3
+                skew[cand_key(other)] = 1e-3
+                for st_ in mon._triples.values():
+                    st_.reservoirs.clear()           # drop stale evidence
+
+    def reader(i):
+        try:
+            for _ in range(ROUNDS * 8):
+                ent = cache.frozen_entry(fam.name, TPU_V5E.name, data)
+                assert ent is not None
+                assert _candidate_bytes(ent.candidate) in legal
+                cand = cache.best_variant(fam, TPU_V5E, data)
+                assert _candidate_bytes(cand) in legal
+                fn = cache.warm_callable(fam, TPU_V5E,
+                                         tuple(data.items()), True)
+                assert fn is not None
+        finally:
+            stop.set()
+
+    errors = []
+
+    def guarded(fn, i):
+        try:
+            fn(i)
+        except BaseException as e:                 # noqa: BLE001
+            errors.append(e)
+            stop.set()
+
+    threads = [threading.Thread(target=guarded, args=(swapper, 0))]
+    threads += [threading.Thread(target=guarded, args=(reader, i))
+                for i in range(N_THREADS - 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+
+    # the monitor really swapped (usually many times), every swap was both
+    # counted and evented, and the final pick is one of the two candidates
+    assert mon.stats.swaps >= 1
+    assert len(mon.events) == mon.stats.swaps
+    final = cache.frozen_entry(fam.name, TPU_V5E.name, data)
+    assert _candidate_bytes(final.candidate) in legal
+    # exact stat sums: frozen reads + swap publishes bypass the locked
+    # tiers entirely — best_variant served every read from tier 0
+    locked_after = (cache.stats.memory_hits + cache.stats.disk_hits
+                    + cache.stats.cold_builds)
+    assert locked_after == locked_before
+    assert cache.stats.frozen_hits > 0
+
+
 def test_frozen_read_path_safe_under_concurrent_freeze(tmp_path):
     """Readers racing freeze()/unfreeze() republications never crash, never
     see a torn plan, and always get the reference candidate."""

@@ -18,14 +18,16 @@ import json
 
 import pytest
 
-from repro.artifacts import DispatchCache
+from repro.artifacts import ArtifactStore, DispatchCache, compile_family
 from repro.artifacts.dispatch import get_default_cache, set_default_cache
 from repro.configs import get_config, get_smoke_config
 from repro.core import TPU_V5E
 from repro.kernels.ops import FAMILIES
-from repro.plans import (PLAN_FORMAT_VERSION, PlanStore, apply_serve_plan,
+from repro.plans import (PLAN_FORMAT_VERSION, PlanStore, StalePlanError,
+                         StalePlanWarning, apply_serve_plan,
                          build_serve_plan, load_serve_plan, op_label,
-                         record_warm_set, trace_warm_set, warm_from_plan)
+                         plan_staleness, record_warm_set, table_digest,
+                         trace_warm_set, warm_from_plan)
 from repro.plans import serde as plan_serde
 
 
@@ -321,6 +323,166 @@ def test_unknown_family_in_plan_is_a_miss_and_publishes_nothing(tmp_path):
     cache = DispatchCache()
     assert apply_serve_plan(tampered, cache=cache) is None
     assert cache.frozen_plan is None               # nothing half-published
+
+
+# ---------------------------------------------------------------------------
+# Staleness digests (PLAN_FORMAT_VERSION 3, ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def _compiled_store(tmp_path, shapes=({"M": 512, "N": 512, "K": 512},)):
+    store = ArtifactStore(tmp_path)
+    compile_family(FAMILIES["matmul"], store, machines=[TPU_V5E],
+                   shapes=[dict(s) for s in shapes])
+    return store
+
+
+def _retune(store):
+    """Simulate scripts/tune_artifacts.py rewriting a dispatch table in
+    place: any payload change (here, a re-ranked score) changes the
+    canonical digest."""
+    payload = store.load_dispatch("matmul", TPU_V5E.name)
+    assert payload is not None
+    bucket = next(iter(payload["buckets"]))
+    payload["buckets"][bucket][0]["score"] = 123.456
+    store.save_dispatch(payload)
+
+
+def test_v3_plan_records_table_digests_and_roundtrips(tmp_path):
+    cfg = get_smoke_config("llama3_8b")
+    store = _compiled_store(tmp_path)
+    plan, _ = build_serve_plan(cfg, max_len=128,
+                               cache=DispatchCache(store=store))
+    dm = plan.table_digest_map()
+    fams = {e.family for e in plan.entries}
+    assert set(dm) == fams                         # one digest per family
+    assert dm["matmul"] == table_digest(store, "matmul", TPU_V5E.name) != ""
+    # families with no compiled table record the empty digest
+    assert [f for f in dm if dm[f] == ""] == sorted(fams - {"matmul"})
+    pstore = PlanStore(tmp_path)
+    pstore.save_plan(plan)
+    loaded = pstore.load_plan(cfg.name, TPU_V5E.name)
+    assert loaded == plan and loaded.table_digests == plan.table_digests
+    # storeless build: every digest empty, still a valid v3 plan
+    bare, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    assert set(bare.table_digest_map().values()) == {""}
+
+
+def test_plan_staleness_detects_retuned_table(tmp_path):
+    cfg = get_smoke_config("llama3_8b")
+    store = _compiled_store(tmp_path)
+    plan, _ = build_serve_plan(cfg, max_len=128,
+                               cache=DispatchCache(store=store))
+    assert plan_staleness(plan, store=store) == {}  # fresh
+    recorded = plan.table_digest_map()["matmul"]
+    _retune(store)
+    stale = plan_staleness(plan, store=store)
+    assert set(stale) == {"matmul"}
+    rec, cur = stale["matmul"]
+    assert rec == recorded and cur != recorded and cur != ""
+
+
+def test_stale_digest_warns_by_default_and_refuses_strict(tmp_path):
+    """The tentpole contract: a retuned table under a shipped plan warns
+    (and falls back to online warm-up) by default, refuses under strict —
+    and a fresh plan keeps loading silently either way."""
+    cfg = get_smoke_config("llama3_8b")
+    store = _compiled_store(tmp_path)
+    cache = DispatchCache(store=store)
+    plan, _ = build_serve_plan(cfg, max_len=128, cache=cache)
+    pstore = PlanStore(tmp_path)
+    pstore.save_plan(plan)
+
+    # fresh: both modes load the plan, no staleness warning
+    import warnings as _w
+    for strict in (False, True):
+        with _w.catch_warnings(record=True) as rec:
+            _w.simplefilter("always")
+            picks = warm_from_plan(cfg, max_len=128, store=pstore,
+                                   cache=DispatchCache(store=store),
+                                   strict=strict)
+        assert picks is not None
+        assert not [w for w in rec
+                    if issubclass(w.category, StalePlanWarning)]
+
+    _retune(store)
+    with pytest.warns(StalePlanWarning, match="STALE.*matmul"):
+        assert warm_from_plan(cfg, max_len=128, store=pstore,
+                              cache=DispatchCache(store=store)) is None
+    with pytest.raises(StalePlanError, match="plan_artifacts"):
+        warm_from_plan(cfg, max_len=128, store=pstore,
+                       cache=DispatchCache(store=store), strict=True)
+
+
+def test_engine_start_warns_then_falls_back_online_on_stale_plan(tmp_path):
+    """warm_kernel_dispatch: the warn path still warms (online), the
+    strict path raises before touching any tier — the CLI's
+    --strict-plans wiring sits directly on top of this."""
+    from repro.runtime.serving import warm_kernel_dispatch
+    cfg = get_smoke_config("llama3_8b")
+    store = _compiled_store(tmp_path)
+    cache = DispatchCache(store=store)
+    plan, _ = build_serve_plan(cfg, max_len=128, cache=cache)
+    pstore = PlanStore(tmp_path)
+    pstore.save_plan(plan)
+    _retune(store)
+
+    warm_cache = DispatchCache(store=store)
+    set_default_cache(warm_cache)
+    with pytest.warns(StalePlanWarning):
+        picks = warm_kernel_dispatch(cfg, max_len=128, plan_store=pstore)
+    assert picks                                    # online fallback warmed
+    assert warm_cache.frozen_plan is not None
+
+    set_default_cache(DispatchCache(store=store))
+    with pytest.raises(StalePlanError):
+        warm_kernel_dispatch(cfg, max_len=128, plan_store=pstore,
+                             strict_plans=True)
+
+
+def test_v2_plan_payload_is_a_miss_never_an_error(tmp_path):
+    """A pre-digest (v2) plan has no table_digests: the version check must
+    read it as a silent miss — even under strict, which only governs
+    *loaded* plans."""
+    cfg = get_smoke_config("llama3_8b")
+    plan, _ = build_serve_plan(cfg, max_len=128, cache=DispatchCache())
+    pstore = PlanStore(tmp_path)
+    path = pstore.save_plan(plan)
+    payload = json.loads(path.read_text())
+    payload["format"] = 2
+    del payload["table_digests"]                    # v2 schema had none
+    path.write_text(json.dumps(payload))
+    assert pstore.load_plan(cfg.name, TPU_V5E.name) is None
+    for strict in (False, True):
+        assert warm_from_plan(cfg, max_len=128, store=pstore,
+                              cache=DispatchCache(), strict=strict) is None
+
+
+def test_plan_artifacts_cli_check_mode(tmp_path, capsys):
+    """scripts/plan_artifacts.py --check: FRESH exits 0; STALE exits 0 in
+    warn mode and 1 under --strict (the CI stale-plan contract)."""
+    import importlib.util
+    import os
+    spec = importlib.util.spec_from_file_location(
+        "plan_artifacts_check", os.path.join(os.path.dirname(__file__), "..",
+                                             "scripts", "plan_artifacts.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    base = ["--config", "llama3_8b", "--smoke", "--machine", "tpu_v5e",
+            "--max-len", "128", "--out", str(tmp_path)]
+
+    assert mod.main(base) == 0                      # build (digests all "")
+    capsys.readouterr()
+    assert mod.main(base + ["--check"]) == 0
+    assert "[FRESH]" in capsys.readouterr().out
+
+    # a table appearing where none existed is also drift: the plan's picks
+    # were resolved without it
+    _compiled_store(tmp_path)
+    assert mod.main(base + ["--check"]) == 0        # warn mode exits 0
+    assert "[STALE]" in capsys.readouterr().out
+    assert mod.main(base + ["--check", "--strict"]) == 1
+    out = capsys.readouterr()
+    assert "[STALE]" in out.out and "stale plan(s)" in out.err
 
 
 # ---------------------------------------------------------------------------
