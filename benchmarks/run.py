@@ -718,6 +718,58 @@ def bench_adaptive_swap(quick=False):
     return rows
 
 
+def bench_chaos(quick=False):
+    """Serving cost under sustained recoverable faults (ISSUE 9): one
+    injected ``serve.decode`` kernel failure per ~8-tick window against a
+    warm+frozen engine with graceful degradation on.  Every fault demotes
+    the pick down the candidate ranking (or retries a non-frozen call), so
+    the row prices the demote-and-retry machinery itself — directly
+    comparable to ``serve_decode_smoke``, whose fault-free path it
+    shadows.  All requests must still finish, with >= 1 DegradeEvent
+    recorded."""
+    from repro.artifacts.dispatch import (DispatchCache, get_default_cache,
+                                          set_default_cache)
+    from repro.configs import get_smoke_config
+    from repro.models import init_model
+    from repro.runtime import ServeEngine, faults
+    from repro.runtime.faults import FaultSpec
+    cfg = get_smoke_config("llama3_8b")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    prior = get_default_cache()
+    set_default_cache(DispatchCache())
+    try:
+        eng = ServeEngine(cfg, params, max_batch=4, max_len=128,
+                          warm_kernels=True, degrade=True)
+        rng = np.random.default_rng(0)
+        # warmup tick set (compile outside the timed region), fault-free
+        eng.submit(rng.integers(0, cfg.vocab, 31), max_new=2)
+        eng.run_until_drained()
+        nreq, max_new = (3, 8) if quick else (8, 16)
+        for _ in range(nreq):
+            plen = int(rng.integers(4, 24))
+            eng.submit(rng.integers(0, cfg.vocab, plen), max_new=max_new)
+        # the engine's tick cursor (sched.ticks) kept counting through
+        # warmup: schedule one decode failure in every 8-tick window the
+        # timed run can possibly reach
+        start = eng.sched.ticks
+        sched = [FaultSpec("serve.decode", t, "error")
+                 for t in range(start + 8, start + 400, 8)]
+        t0 = time.perf_counter()
+        with faults.inject(sched) as inj:
+            done = eng.run_until_drained()
+        dt = time.perf_counter() - t0
+    finally:
+        set_default_cache(prior)
+    toks = sum(len(r.out) for r in done)
+    assert len(done) == nreq and toks > 0
+    assert len(inj.fired) >= 1                 # the drill really fired
+    assert len(eng.degrade_events) >= 1        # and demoted down the ranking
+    return [("serve_degraded_tok_us", dt * 1e6 / toks,
+             f"tok/s={toks / dt:.0f} faults={len(inj.fired)} "
+             f"demotions={eng._cache.stats.demotions} "
+             f"{eng.robustness_line()}")]
+
+
 # Named groups for --only filtering (comma-separated exact names).
 BENCH_GROUPS = (
     ("table1", bench_table1_matmul),
@@ -736,6 +788,7 @@ BENCH_GROUPS = (
     ("treebuild", lambda quick: bench_tree_build()),
     ("lm", bench_lm_step),
     ("adaptive", bench_adaptive_swap),
+    ("chaos", bench_chaos),
 )
 
 

@@ -1,0 +1,185 @@
+#!/usr/bin/env python
+"""CI gate for the chaos-injection harness (PR 9): seeded fault schedules
+through the smoke model must drain token-exact.
+
+Three drills, mirroring the acceptance sweep in ``tests/test_faults.py``
+but standalone so CI runs it against an installed tree in seconds:
+
+1. **Parity sweep** — ``--seeds`` deterministic schedules
+   (``FaultSchedule.random``) over every engine injection site
+   (``pool.alloc``, ``serve.cow``, ``serve.prefill``, ``serve.decode``,
+   ``serve.tick``); each drained run must be token-exact against the
+   fault-free reference, with the KV-pool invariants re-proved every tick.
+2. **Degrade drill** — a kernel-call failure under a frozen warm plan must
+   demote a pick down the candidate ranking (>= 1 DegradeEvent) and still
+   produce the reference tokens.
+3. **Fatal drill** — an unrecoverable fault must propagate loudly, with
+   the engine still drainable afterwards.
+
+Exits non-zero on the first violated property.
+
+    python scripts/ci_chaos.py [--seeds 6] [--config yi_6b]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+ENGINE_SITES = ("pool.alloc", "serve.cow", "serve.prefill", "serve.decode",
+                "serve.tick")
+
+
+def _fail(msg: str) -> int:
+    print(f"[CI-CHAOS FAIL] {msg}", file=sys.stderr)
+    return 1
+
+
+def _build_engine(cfg, params, **kw):
+    """Fresh engine over a fresh dispatch cache (demotions must not leak
+    between drills — each run starts from the pristine ranking)."""
+    from repro.artifacts.dispatch import DispatchCache, set_default_cache
+    from repro.runtime import ServeEngine
+    set_default_cache(DispatchCache())
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("prefill_chunk", 8)
+    return ServeEngine(cfg, params, **kw)
+
+
+def _chaos_prompts(cfg):
+    """A leader plus followers sharing its first 22 tokens: 22 % 4 != 0
+    diverges mid-block, so followers map a partial tail block and the
+    scheduler plans real CoW copies — the ``serve.cow`` site runs."""
+    rng = np.random.default_rng(1234)
+    lead = rng.integers(0, cfg.vocab, 24).astype(np.int32)
+    follows = [np.concatenate([lead[:22], rng.integers(0, cfg.vocab, 6)]
+                              ).astype(np.int32) for _ in range(2)]
+    return [lead] + follows
+
+
+def _drain_checked(eng, max_ticks=300):
+    """run_until_drained with the pool invariants re-proved every tick."""
+    done = []
+    for _ in range(max_ticks):
+        done.extend(eng.step())
+        eng.pool.check_invariants(
+            block_tables=[s.blocks for s in eng.sched.running()])
+        if not eng.sched.has_work():
+            break
+    while eng._inflight:
+        done.extend(eng._commit(eng._inflight.popleft()))
+    return done
+
+
+def _staged_run(eng, prompts, *, max_new=5):
+    """Leader first (populating the prefix index), then the followers —
+    mid-block divergence then forces CoW.  Returns {rid: tokens}."""
+    outs = {}
+    eng.submit(prompts[0], max_new=max_new)
+    for r in _drain_checked(eng):
+        outs[r.rid] = list(r.out)
+    for p in prompts[1:]:
+        eng.submit(p, max_new=max_new)
+    for r in _drain_checked(eng):
+        outs[r.rid] = list(r.out)
+    return outs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--seeds", type=int, default=6,
+                    help="number of random schedules in the parity sweep")
+    ap.add_argument("--config", default="yi_6b",
+                    help="config whose smoke variant the drills serve")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import init_model
+    from repro.runtime import faults
+    from repro.runtime.faults import (ANY_TICK, FatalFault, FaultSchedule,
+                                      FaultSpec)
+
+    cfg = get_smoke_config(args.config)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = _chaos_prompts(cfg)
+
+    # 1. parity sweep against the fault-free reference
+    ref_eng = _build_engine(cfg, params, prefix_sharing=True)
+    ref = _staged_run(ref_eng, prompts)
+    if ref_eng.pool.stats.cow_copies < 1:
+        return _fail("reference workload never exercised the CoW site")
+
+    total_fired = 0
+    for seed in range(args.seeds):
+        schedule = FaultSchedule.random(seed, sites=ENGINE_SITES,
+                                        max_tick=24, n=4)
+        eng = _build_engine(cfg, params, prefix_sharing=True, degrade=True)
+        with faults.inject(schedule) as inj:
+            got = _staged_run(eng, prompts)
+        if got != ref:
+            return _fail(f"seed {seed} diverged from the fault-free "
+                         f"reference (schedule={list(schedule)}, "
+                         f"fired={inj.fired})")
+        total_fired += len(inj.fired)
+        print(f"[ci-chaos] seed {seed}: parity ok, "
+              f"{len(inj.fired)} fault(s) fired | {eng.robustness_line()}")
+    if total_fired == 0:
+        return _fail("parity sweep fired no faults — the schedules never "
+                     "hit the workload's sites/ticks")
+
+    # 2. degrade drill: frozen warm plan, kernel failure -> demotion
+    warm_ref_eng = _build_engine(cfg, params, warm_kernels=True)
+    for p in prompts:
+        warm_ref_eng.submit(p, max_new=5)
+    warm_ref = {r.rid: list(r.out) for r in _drain_checked(warm_ref_eng)}
+
+    eng = _build_engine(cfg, params, warm_kernels=True, degrade=True)
+    for p in prompts:
+        eng.submit(p, max_new=5)
+    with faults.inject([FaultSpec("serve.prefill", ANY_TICK, "error"),
+                        FaultSpec("serve.decode", ANY_TICK, "error")]):
+        got = {r.rid: list(r.out) for r in _drain_checked(eng)}
+    if got != warm_ref:
+        return _fail("degrade drill diverged from the fault-free reference")
+    if len(eng.degrade_events) < 1:
+        return _fail("degrade drill recorded no DegradeEvent")
+    print(f"[ci-chaos] degrade drill: parity ok, "
+          f"{len(eng.degrade_events)} demotion event(s) | "
+          f"{eng.robustness_line()}")
+
+    # 3. fatal drill: loud failure, engine still drainable
+    eng = _build_engine(cfg, params, degrade=True)
+    for p in prompts:
+        eng.submit(p, max_new=4)
+    raised = False
+    with faults.inject([FaultSpec("serve.decode", ANY_TICK, "fatal")]):
+        try:
+            for _ in range(100):
+                eng.step()
+                if not eng.sched.has_work():
+                    break
+        except FatalFault:
+            raised = True
+    if not raised:
+        return _fail("fatal fault did not propagate out of the engine")
+    done = _drain_checked(eng)
+    if len(done) != len(prompts) or any(len(r.out) != 4 for r in done):
+        return _fail("engine did not drain to completion after the fatal "
+                     "fault")
+    print("[ci-chaos] fatal drill: raised loudly, engine drained clean")
+
+    print(f"[CI-CHAOS OK] {args.seeds} seeded schedules token-exact, "
+          f"{total_fired} fault(s) fired, degradation + fatal semantics "
+          f"hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -69,6 +69,43 @@ from .store import ArtifactStore
 DispatchKey = Tuple[str, str, Tuple[Tuple[str, int], ...]]
 FrozenKey = Tuple[str, str, FrozenSet[Tuple[str, int]]]
 
+#: Identity of a candidate for demotion/comparison purposes: the leaf it
+#: came from + its full program-parameter assignment (scores are *model*
+#: opinions and excluded).  The runtime monitor re-exports these.
+CandKey = Tuple[int, Tuple[Tuple[str, int], ...]]
+
+
+def cand_key(c: Candidate) -> CandKey:
+    return (int(c.leaf_index),
+            tuple(sorted((k, int(v)) for k, v in c.assignment.items())))
+
+
+@dataclass(frozen=True)
+class DegradeEvent:
+    """One observable fall down the candidate ranking (the failure-path
+    mirror of the monitor's ``SwapEvent``): which pick raised, what
+    replaced it, and why.  ``exhausted`` flags a full wrap-around — every
+    ranked candidate had been demoted, so the ladder reset to the top pick
+    rather than leave the triple unresolvable (cache-miss-never-error
+    extends to demotion: dispatch always answers)."""
+
+    tick: int
+    family: str
+    machine: str
+    data: Tuple[Tuple[str, int], ...]        # sorted items
+    old: CandKey
+    new: CandKey
+    error: str                               # repr of the triggering failure
+    source: str                              # tier that decided the fallback
+    exhausted: bool = False
+
+    def describe(self) -> str:
+        dims = ",".join(f"{k}={v}" for k, v in self.data)
+        tail = " [ladder exhausted; reset]" if self.exhausted else ""
+        return (f"tick {self.tick}: {self.family}@{dims} demoted "
+                f"{self.old[1]} -> {self.new[1]} ({self.source}) "
+                f"after {self.error}{tail}")
+
 
 def frozen_key(family_name: str, machine_name: str,
                data: Mapping[str, int]) -> FrozenKey:
@@ -224,16 +261,18 @@ class DispatchStats:
     cold_builds: int = 0
     measured_hits: int = 0        # disk hits served in measured (tuned) order
     frozen_hits: int = 0          # fast-lane hits (lock-free, approximate)
+    demotions: int = 0            # candidates demoted after a runtime failure
 
     def reset(self) -> None:
         self.memory_hits = self.disk_hits = self.cold_builds = 0
-        self.measured_hits = self.frozen_hits = 0
+        self.measured_hits = self.frozen_hits = self.demotions = 0
 
     def as_dict(self) -> Dict[str, int]:
         return {"memory_hits": self.memory_hits, "disk_hits": self.disk_hits,
                 "cold_builds": self.cold_builds,
                 "measured_hits": self.measured_hits,
-                "frozen_hits": self.frozen_hits}
+                "frozen_hits": self.frozen_hits,
+                "demotions": self.demotions}
 
 
 class DispatchCache:
@@ -267,6 +306,12 @@ class DispatchCache:
         self._lock = threading.Lock()
         # recording mode (see record()): None except while a trace is active
         self._recorder: Optional[DispatchRecord] = None
+        # graceful degradation (see demote()): per-triple candidate keys the
+        # runtime proved broken; the tiers skip them until a promotion
+        # (frozen publish of a marked candidate) or exhaustion-reset clears
+        # the mark
+        self._demoted: Dict[DispatchKey, set] = {}
+        self.degrade_events: List[DegradeEvent] = []
         # fast lane: swapped atomically by freeze(), read without the lock
         self.frozen_plan: Optional[FrozenDispatchPlan] = None
         # bumped by unfreeze()/clear(); attach_store's re-freeze aborts if
@@ -313,11 +358,14 @@ class DispatchCache:
                 self._lru.move_to_end(key)
                 self.stats.memory_hits += 1
                 return hit
+            excluded = frozenset(self._demoted.get(key, ()))
 
-        hit2 = self._from_disk(family, machine, data)
+        hit2 = self._from_disk(family, machine, data, exclude=excluded)
         if hit2 is None:
-            cold = rank_candidates(family, machine, data,
-                                   leaves=self._tree(family))[0]
+            ranked = rank_candidates(family, machine, data,
+                                     leaves=self._tree(family))
+            cold = next((c for c in ranked if cand_key(c) not in excluded),
+                        ranked[0])   # ladder exhausted: wrap to the top pick
 
         with self._lock:
             if hit2 is not None:
@@ -335,6 +383,75 @@ class DispatchCache:
                 self._lru.popitem(last=False)
         return cand, source
 
+    # -- graceful degradation ------------------------------------------------
+    def demote(self, family: FamilySpec, machine: MachineDescription,
+               data: Mapping[str, int], *,
+               candidate: Optional[Candidate] = None,
+               error: Optional[BaseException] = None,
+               tick: int = -1) -> Candidate:
+        """A runtime failure disproved the triple's current pick: fall down
+        the already-proven ranking to the next feasible variant.
+
+        The failing ``candidate`` (defaulting to the triple's current
+        resolution) is marked broken for this triple; the replacement is
+        re-resolved through the normal tiers with marked candidates
+        skipped — so the fallback order *is* the case discussion's ranking
+        (measured beats symbolic beats cold), not a separate policy.  If
+        the triple is frozen, the replacement is republished through the
+        atomic ``freeze_resolved`` merge so the lock-free lane degrades
+        too.  When every ranked candidate has been demoted the ladder
+        resets: marks are cleared, the top pick returns, and the event is
+        flagged ``exhausted`` — dispatch always answers (the engine's
+        retry budget, not the cache, decides when to give up on a
+        request).  Marks are cleared early when a candidate is re-promoted
+        into the frozen lane (the monitor's measured recovery path).
+
+        Returns the replacement candidate; records a :class:`DegradeEvent`
+        in :attr:`degrade_events` and bumps ``stats.demotions``."""
+        key: DispatchKey = (family.name, machine.name,
+                            tuple(sorted((k, int(v))
+                                         for k, v in data.items())))
+        if candidate is None:
+            ent = self.frozen_entry(family.name, machine.name, data)
+            if ent is not None:
+                candidate = ent.candidate
+            else:
+                with self._lock:
+                    hit = self._lru.get(key)
+                candidate = hit[0] if hit is not None else None
+        if candidate is None:                 # never resolved: resolve first
+            candidate = self._resolve_tiers(family, machine, data)[0]
+        old_key = cand_key(candidate)
+        with self._lock:
+            self._demoted.setdefault(key, set()).add(old_key)
+            self._lru.pop(key, None)          # replacement re-resolves fresh
+            self.stats.demotions += 1
+        new_cand, source = self._resolve_tiers(family, machine, data)
+        exhausted = cand_key(new_cand) in self._demoted.get(key, ())
+        if exhausted:                         # full wrap-around: reset ladder
+            with self._lock:
+                self._demoted.pop(key, None)
+        frozen = self.frozen_plan
+        if frozen is not None and \
+                frozen.get(family.name, machine.name, data) is not None:
+            self.freeze_resolved([(family, machine, data, new_cand, source)])
+        event = DegradeEvent(
+            tick=int(tick), family=family.name, machine=machine.name,
+            data=key[2], old=old_key, new=cand_key(new_cand),
+            error=repr(error) if error is not None else "",
+            source=source, exhausted=exhausted)
+        self.degrade_events.append(event)
+        return new_cand
+
+    def demoted_keys(self, family_name: str, machine_name: str,
+                     data: Mapping[str, int]) -> FrozenSet[CandKey]:
+        """The triple's current runtime-broken marks (observability)."""
+        key: DispatchKey = (family_name, machine_name,
+                            tuple(sorted((k, int(v))
+                                         for k, v in data.items())))
+        with self._lock:
+            return frozenset(self._demoted.get(key, ()))
+
     def clear(self) -> None:
         with self._lock:
             self._lru.clear()
@@ -342,6 +459,8 @@ class DispatchCache:
             self._trees.clear()
             self.stats.reset()
             self.frozen_plan = None
+            self._demoted.clear()
+            self.degrade_events.clear()
             self._unfreeze_gen += 1
 
     def attach_store(self, store: Optional[ArtifactStore]) -> None:
@@ -446,6 +565,21 @@ class DispatchCache:
             all_triples.update(new_triples)
             plan = FrozenDispatchPlan(merged, tuple(all_triples.values()))
             self.frozen_plan = plan
+            # promotion clears demotion: publishing a candidate into the
+            # fast lane (the monitor's measured re-promote path) is the
+            # evidence it recovered — the locked tiers must agree with the
+            # frozen lane, so its runtime-broken mark is dropped
+            if self._demoted:
+                for fkey, ent in resolved.items():
+                    fam, mach, d = new_triples[fkey]
+                    dkey: DispatchKey = (
+                        fam.name, mach.name,
+                        tuple(sorted((k, int(v)) for k, v in d.items())))
+                    marks = self._demoted.get(dkey)
+                    if marks is not None:
+                        marks.discard(cand_key(ent.candidate))
+                        if not marks:
+                            del self._demoted[dkey]
         return plan
 
     # -- recording mode (warm-set tracing) -----------------------------------
@@ -625,11 +759,16 @@ class DispatchCache:
         return table, leaves, bucket, entries
 
     def _from_disk(self, family: FamilySpec, machine: MachineDescription,
-                   data: Mapping[str, int]
+                   data: Mapping[str, int],
+                   exclude: FrozenSet[CandKey] = frozenset()
                    ) -> Optional[Tuple[Candidate, bool]]:
         """Resolve via the precompiled table; ``(candidate, measured)`` or
         ``None``.  ``measured`` flags that a tuned (measured-rank) order
-        decided the walk — :class:`DispatchStats` reports it."""
+        decided the walk — :class:`DispatchStats` reports it.  ``exclude``
+        carries runtime-demoted candidate keys (:meth:`demote`): the walk
+        skips them like infeasible entries, falling down the same ranking;
+        a shortlist that is *entirely* excluded returns ``None`` so the
+        cold tier applies its exhaustion wrap-around."""
         loaded = self._bucket_entries(family, machine, data)
         if loaded is None:
             return None
@@ -647,6 +786,8 @@ class DispatchCache:
                 score = float(entry["score"])
             except (AttributeError, KeyError, TypeError, ValueError):
                 return None                   # mangled entry => cache miss
+            if exclude and (idx, tuple(sorted(asg.items()))) in exclude:
+                continue                      # runtime-demoted: next ranked
             leaf = leaves.get(idx)
             if leaf is None:
                 return None

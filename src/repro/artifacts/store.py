@@ -21,6 +21,9 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 from ..core.constraints import Constraint
 from ..core.plan import Leaf
+# chaos-drill hooks only: repro.runtime.faults is jax-free and its site
+# checks cost one module-global load when no injector is armed
+from ..runtime import faults
 from . import serde
 
 _ENV_ROOT = "REPRO_ARTIFACT_DIR"
@@ -43,12 +46,26 @@ def atomic_write_text(path: Path, text: str) -> Path:
     return path
 
 
-def read_json_dict(path: Path) -> Optional[Dict[str, Any]]:
+def read_json_dict(path: Path,
+                   fault_site: str = "artifact.read"
+                   ) -> Optional[Dict[str, Any]]:
     """Forgiving read: a missing file, unreadable JSON, or a non-dict
-    payload returns ``None`` (cache miss), never raises."""
+    payload returns ``None`` (cache miss), never raises.
+
+    ``fault_site`` names this read for the chaos drills
+    (:mod:`repro.runtime.faults`): an armed injector can raise an I/O
+    failure mid-open or corrupt the bytes before parsing (torn truncation /
+    NUL garbling).  Both land inside the ``except`` below — the drills
+    *prove* the forgiving-read policy rather than bypass it.  Only a
+    :class:`~repro.runtime.faults.FatalFault` escapes, by design."""
     try:
         with open(path) as f:
-            payload = json.load(f)
+            text = f.read()
+        # the one injection hook: raising kinds (io) raise from inside it,
+        # byte kinds (torn/garble) mangle the text before parsing
+        payload = json.loads(faults.corrupt_text(fault_site, text))
+    except faults.FatalFault:
+        raise
     except (OSError, ValueError):
         return None
     return payload if isinstance(payload, dict) else None

@@ -75,6 +75,20 @@ def main() -> None:
                          "ratio for a window to disagree")
     ap.add_argument("--swap-patience", type=int, default=2,
                     help="consecutive disagreeing windows before a hot-swap")
+    ap.add_argument("--degrade", action="store_true",
+                    help="graceful degradation: a failed kernel call demotes "
+                         "the frozen pick down the candidate ranking and "
+                         "retries once; a second failure preempts the "
+                         "affected sequences (recompute) instead of killing "
+                         "the engine")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission queue: submissions beyond this "
+                         "many waiting requests are shed with a structured "
+                         "queue_full error + retry hint (default: unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline: queued or running requests "
+                         "older than this are cancelled with a structured "
+                         "deadline error (default: none)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -96,7 +110,10 @@ def main() -> None:
                       monitor_window=args.monitor_window,
                       monitor_every=args.monitor_every,
                       swap_threshold=args.swap_threshold,
-                      swap_patience=args.swap_patience)
+                      swap_patience=args.swap_patience,
+                      degrade=args.degrade,
+                      max_queue=args.max_queue,
+                      deadline_ms=args.deadline_ms)
     if eng.kernel_plan:
         for name, info in eng.kernel_plan.items():
             print(f"kernel {name} [{info['rank_source']}]: "
@@ -111,7 +128,10 @@ def main() -> None:
     dt = time.time() - t0
     toks = sum(len(r.out) for r in done)
     for r in done[:4]:
-        print(f"req {r.rid}: {r.out}")
+        if r.error is not None:
+            print(f"req {r.rid}: [{r.error.code}] {r.error}")
+        else:
+            print(f"req {r.rid}: {r.out}")
     st = eng.sched.stats
     pst = eng.pool.stats
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
@@ -129,6 +149,9 @@ def main() -> None:
         print(eng.monitor.stats_line())
         for ev in eng.monitor.events:
             print(f"swap {ev.describe()}")
+    print(eng.robustness_line())
+    for ev in eng.degrade_events:
+        print(f"degrade {ev.describe()}")
 
 
 if __name__ == "__main__":

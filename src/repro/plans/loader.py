@@ -197,6 +197,7 @@ def apply_serve_plan(plan: ServePlan, *,
     is published in that case, so a bad artifact degrades to online warm-up
     with the cache untouched."""
     from ..kernels.ops import FAMILIES
+    from ..runtime import faults
     cache = cache if cache is not None else get_default_cache()
     resolved = []
     for e in plan.entries:
@@ -206,8 +207,14 @@ def apply_serve_plan(plan: ServePlan, *,
         resolved.append((family, machine, e.data_dict(), e.candidate,
                          e.rank_source))
     try:
+        # chaos site: an injected apply failure degrades to online warm-up
+        # exactly like an uninstantiable candidate would
+        faults.maybe_fault("plan.apply")
         cache.freeze_resolved(resolved)
-    except (AttributeError, KeyError, TypeError, ValueError):
+    except faults.FatalFault:
+        raise
+    except (faults.InjectedFault, AttributeError, KeyError, TypeError,
+            ValueError):
         return None                          # uninstantiable candidate
     return {e.label: {"candidate": e.candidate,
                       "rank_source": e.rank_source}

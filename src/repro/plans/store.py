@@ -40,7 +40,8 @@ class PlanStore:
 
     def load_plan(self, config_name: str,
                   machine_name: str) -> Optional[serde.ServePlan]:
-        payload = read_json_dict(self.plan_path(config_name, machine_name))
+        payload = read_json_dict(self.plan_path(config_name, machine_name),
+                                 fault_site="plan.read")
         if payload is None:
             return None
         try:

@@ -1,16 +1,53 @@
 """Runtime: step builders, fault tolerance, paged serving engine,
-adaptive kernel monitoring."""
-from .steps import (build_eval_step, build_serve_steps, build_train_step,
-                    cross_entropy, greedy_sample, loss_fn)
-from .ft import StragglerMonitor, TrainController, elastic_mesh_shape
-from .kv_pool import GARBAGE_BLOCK, PREFIX_ROOT, PagedKVPool, PoolStats
-from .monitor import KernelMonitor, MonitorStats, SwapEvent, cand_key
-from .scheduler import Request, Scheduler, SeqState, TickPlan
-from .serving import ServeEngine, warm_kernel_dispatch
+adaptive kernel monitoring, chaos-injection drills.
 
-__all__ = ["build_eval_step", "build_serve_steps", "build_train_step",
-           "cross_entropy", "greedy_sample", "loss_fn", "StragglerMonitor",
-           "TrainController", "elastic_mesh_shape", "GARBAGE_BLOCK",
-           "PREFIX_ROOT", "PagedKVPool", "PoolStats", "KernelMonitor",
-           "MonitorStats", "SwapEvent", "cand_key", "Request", "Scheduler",
-           "SeqState", "TickPlan", "ServeEngine", "warm_kernel_dispatch"]
+Exports resolve lazily (PEP 562): :mod:`repro.artifacts.store` imports
+:mod:`repro.runtime.faults` at module scope, and an eager ``from .steps
+import ...`` here would pull jax into every artifact read.  Attribute
+access triggers the real import, so ``from repro.runtime import
+ServeEngine`` still works unchanged.
+"""
+from typing import Dict
+
+_EXPORTS: Dict[str, str] = {
+    # steps
+    "build_eval_step": "steps", "build_serve_steps": "steps",
+    "build_train_step": "steps", "cross_entropy": "steps",
+    "greedy_sample": "steps", "loss_fn": "steps",
+    # ft
+    "StragglerMonitor": "ft", "TrainController": "ft",
+    "elastic_mesh_shape": "ft",
+    # faults
+    "ANY_TICK": "faults", "FaultError": "faults", "FaultInjector": "faults",
+    "FaultSchedule": "faults", "FaultSpec": "faults", "FatalFault": "faults",
+    "InjectedFault": "faults", "InjectedIOFault": "faults",
+    "TickWatchdog": "faults", "inject": "faults",
+    # kv_pool
+    "GARBAGE_BLOCK": "kv_pool", "PREFIX_ROOT": "kv_pool",
+    "PagedKVPool": "kv_pool", "PoolStats": "kv_pool",
+    # monitor
+    "KernelMonitor": "monitor", "MonitorStats": "monitor",
+    "SwapEvent": "monitor", "cand_key": "monitor",
+    # scheduler
+    "Request": "scheduler", "RequestError": "scheduler",
+    "Scheduler": "scheduler", "SeqState": "scheduler",
+    "TickPlan": "scheduler",
+    # serving
+    "ServeEngine": "serving", "warm_kernel_dispatch": "serving",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    value = getattr(importlib.import_module(f".{module}", __name__), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -109,6 +109,7 @@ class TrainController:
     def run(self, state: PyTree, *, start_step: int, num_steps: int
             ) -> Tuple[PyTree, List[Dict[str, float]]]:
         history: List[Dict[str, float]] = []
+        initial = state            # pre-first-checkpoint restarts replay this
         step = start_step
         retries = 0
         while step < start_step + num_steps:
@@ -141,8 +142,11 @@ class TrainController:
                             self.max_retries)
                 restored_step, restored = self.ckpt.restore_latest(state)
                 if restored is None:
-                    # no checkpoint yet: restart from the initial state
+                    # no checkpoint yet: restart from the initial state —
+                    # rewinding the step counter alone would re-apply
+                    # updates already folded into the live state
                     step = start_step
+                    state = initial
                 else:
                     state = restored
                     step = restored_step

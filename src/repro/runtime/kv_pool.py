@@ -47,6 +47,8 @@ import collections
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from . import faults
+
 GARBAGE_BLOCK = 0
 
 #: chain-hash seed for "no blocks yet" (position 0 of every sequence).
@@ -151,6 +153,12 @@ class PagedKVPool:
         prefix blocks (LRU) before refusing."""
         if n < 0:
             raise ValueError(f"alloc({n})")
+        spec = faults.maybe_fault("pool.alloc")
+        if spec is not None and spec.kind == "exhaust":
+            # injected burst pressure: refuse exactly like a real shortfall
+            # (the scheduler's head-room/preemption machinery must absorb it)
+            self.stats.alloc_failures += 1
+            return None
         if n > len(self._free) + self.num_reclaimable:
             self.stats.alloc_failures += 1
             return None

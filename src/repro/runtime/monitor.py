@@ -42,6 +42,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..artifacts.dispatch import CandKey, cand_key  # noqa: F401 — re-export
 from ..core.comprehensive import comprehensive_tree
 from ..core.constraints import Verdict
 from ..core.params import MachineDescription, TPU_V5E
@@ -49,18 +50,9 @@ from ..core.plan import FamilySpec
 from ..core.select import Candidate, rank_candidates
 from ..tuning.measure import (MeasureConfig, Timer, default_timer,
                               measure_shape, trimmed_mean_us)
+from . import faults
 
 _LOG = logging.getLogger(__name__)
-
-#: Identity of a candidate for reservoir/comparison purposes: the leaf it
-#: came from + its full program-parameter assignment (scores are *model*
-#: opinions and excluded — the monitor exists to second-guess them).
-CandKey = Tuple[int, Tuple[Tuple[str, int], ...]]
-
-
-def cand_key(c: Candidate) -> CandKey:
-    return (int(c.leaf_index),
-            tuple(sorted((k, int(v)) for k, v in c.assignment.items())))
 
 
 @dataclass
@@ -240,9 +232,12 @@ class KernelMonitor:
     def _sample(self, st: _TripleState, cand: Candidate,
                 shape: Mapping[str, int]) -> None:
         try:
+            faults.maybe_fault("monitor.probe")
             reps = self.timer(st.family, cand.plan, dict(cand.assignment),
                               dict(shape), self.measure)
             us = trimmed_mean_us(reps, self.measure.trim)
+        except faults.FatalFault:
+            raise
         except Exception:                     # noqa: BLE001 — failure is data
             self.stats.probe_failures += 1
             return

@@ -61,7 +61,33 @@ from typing import Deque, List, Optional, Tuple
 
 import numpy as np
 
+from . import faults
 from .kv_pool import PREFIX_ROOT, PagedKVPool
+
+
+class RequestError(ValueError):
+    """Structured per-request failure: what was rejected and why.
+
+    Subclasses ``ValueError`` so pre-existing callers (and tests) that
+    catch the scheduler's validation errors keep working.  Carries a
+    machine-readable ``code`` — ``"too_long"`` / ``"over_capacity"`` /
+    ``"empty_prompt"`` / ``"bad_max_new"`` (validation, raised from
+    ``submit``), ``"queue_full"`` (load shed, *returned*, never raised) or
+    ``"deadline"`` (TTL cancellation, attached to the request at tick
+    time) — plus a ``retry_after_ticks`` hint where retrying can help
+    (shed/deadline) and ``None`` where it cannot (validation)."""
+
+    def __init__(self, code: str, message: str, *, rid: Optional[int] = None,
+                 retry_after_ticks: Optional[int] = None):
+        super().__init__(message)
+        self.code = code
+        self.message = message
+        self.rid = rid
+        self.retry_after_ticks = retry_after_ticks
+
+    def __repr__(self) -> str:
+        return (f"RequestError({self.code!r}, rid={self.rid}, "
+                f"retry_after_ticks={self.retry_after_ticks})")
 
 
 @dataclass
@@ -72,6 +98,13 @@ class Request:
     eos: Optional[int] = None
     out: List[int] = field(default_factory=list)
     done: bool = False
+    #: absolute deadline on the scheduler's clock (None: no TTL).  Expired
+    #: requests are cancelled at tick time — queued or running — keeping
+    #: whatever output already committed.
+    deadline: Optional[float] = None
+    #: structured failure when the request ended abnormally (shed,
+    #: cancelled, rejected); ``done`` is True whenever this is set.
+    error: Optional[RequestError] = None
 
 
 @dataclass
@@ -112,28 +145,39 @@ class SchedStats:
     prefill_tokens: int = 0              # token positions actually computed
     decode_ticks: int = 0
     admission_waits: int = 0             # head-of-line blocked on head-room
+    shed: int = 0                        # submits refused by the queue bound
+    cancelled: int = 0                   # requests expired by their deadline
+    poisoned: int = 0                    # sequences preempted after a fault
 
 
 @dataclass
 class TickPlan:
     """The tensor work one engine step must perform, in order.  ``cow``
     copies run first — a shared block must be duplicated device-side
-    before this tick's prefill/decode writes into the private copy."""
+    before this tick's prefill/decode writes into the private copy.
+    ``cow_owners[i]`` is the sequence whose table entry ``cow[i]``
+    rewrites — fault attribution for the engine's degrade path."""
 
     admitted: List[SeqState] = field(default_factory=list)
     cow: List[Tuple[int, int]] = field(default_factory=list)  # (src, dst)
+    cow_owners: List["SeqState"] = field(default_factory=list)
     prefill: Optional[Tuple[SeqState, int, int]] = None  # (seq, start, len)
     decode: List[SeqState] = field(default_factory=list)
     preempted: List[SeqState] = field(default_factory=list)
+    cancelled: List[Request] = field(default_factory=list)
 
 
 class Scheduler:
     def __init__(self, pool: PagedKVPool, *, max_batch: int, max_len: int,
                  prefill_chunk: int = 32,
                  watermark_blocks: Optional[int] = None,
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False,
+                 max_queue: Optional[int] = None,
+                 clock: faults.Clock = faults.default_clock):
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1: {prefill_chunk}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1: {max_queue}")
         self.pool = pool
         self.max_batch = max_batch
         self.max_len = max_len
@@ -141,27 +185,66 @@ class Scheduler:
         self.prefix_sharing = prefix_sharing
         self.watermark = (max_batch if watermark_blocks is None
                           else watermark_blocks)
+        self.max_queue = max_queue
+        self.clock = clock
         self.queue: Deque[Request] = collections.deque()
         self.slots: List[Optional[SeqState]] = [None] * max_batch
         self.ticks = 0
         self.stats = SchedStats()
 
     # -- client side ----------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        """Queue a request.  Rejects up front what could never be served:
-        the prompt plus the full generation budget must fit both the serve
-        window and the pool."""
+    def submit(self, req: Request) -> Optional[RequestError]:
+        """Queue a request.
+
+        *Malformed* requests — empty prompt, non-positive generation
+        budget, or a prompt + budget that could never fit the serve window
+        or the pool — **raise** a :class:`RequestError` (they are caller
+        bugs; retrying cannot help).  A well-formed request arriving while
+        the queue is at ``max_queue`` is **load-shed**: it is marked done
+        with a ``queue_full`` error carrying a retry-after hint (the ticks
+        the current queue needs to drain, roughly), and that error is
+        *returned* — overload is an operating condition, not an exception."""
+        if len(req.prompt) == 0:
+            raise RequestError("empty_prompt",
+                               f"request {req.rid}: empty prompt",
+                               rid=req.rid)
+        if req.max_new < 1:
+            raise RequestError(
+                "bad_max_new",
+                f"request {req.rid}: max_new must be >= 1: {req.max_new}",
+                rid=req.rid)
         total = len(req.prompt) + req.max_new
         if total > self.max_len:
-            raise ValueError(
+            raise RequestError(
+                "too_long",
                 f"request {req.rid}: prompt {len(req.prompt)} + max_new "
-                f"{req.max_new} exceeds max_len {self.max_len}")
+                f"{req.max_new} exceeds max_len {self.max_len}",
+                rid=req.rid)
         if self.pool.blocks_for(total) > self.pool.capacity:
-            raise ValueError(
+            raise RequestError(
+                "over_capacity",
                 f"request {req.rid}: needs "
                 f"{self.pool.blocks_for(total)} blocks, pool capacity is "
-                f"{self.pool.capacity}")
+                f"{self.pool.capacity}",
+                rid=req.rid)
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            err = RequestError(
+                "queue_full",
+                f"request {req.rid}: queue at max_queue={self.max_queue}",
+                rid=req.rid,
+                retry_after_ticks=self._drain_hint())
+            req.error = err
+            req.done = True
+            self.stats.shed += 1
+            return err
         self.queue.append(req)
+        return None
+
+    def _drain_hint(self) -> int:
+        """Rough ticks until the head of today's queue could admit: one
+        chunk-quantized prefill pass per queued prompt ahead of it."""
+        per_req = max(1, -(-self.max_len // self.prefill_chunk))
+        return max(1, len(self.queue) * per_req // max(1, self.max_batch))
 
     def running(self) -> List[SeqState]:
         return [s for s in self.slots if s is not None]
@@ -184,6 +267,12 @@ class Scheduler:
         t = self.ticks
         self.ticks += 1
         plan = TickPlan()
+
+        # 0. deadline sweep: expire TTLs *before* planning work, so a
+        # cancelled sequence neither claims blocks nor joins the decode
+        # batch this tick.  Running victims keep their committed output
+        # (a timeout is a partial answer, not a void one).
+        self._expire_deadlines(plan)
 
         # 1. decode priority: secure a *private* write block for every
         # decode row — allocating the block its next token needs and
@@ -326,6 +415,57 @@ class Scheduler:
         seq.blocks = []
         self.slots[seq.slot] = None
 
+    # -- robustness -----------------------------------------------------------
+    def _expire_deadlines(self, plan: TickPlan) -> None:
+        """Cancel every queued or running request whose deadline passed.
+        One clock read per tick; requests without deadlines cost one
+        attribute test each."""
+        if not self.queue and not any(s is not None for s in self.slots):
+            return
+        now: Optional[float] = None
+        for req in list(self.queue):
+            if req.deadline is None:
+                continue
+            now = self.clock() if now is None else now
+            if now >= req.deadline:
+                self.queue.remove(req)
+                self._cancel(req, plan)
+        for seq in self.running():
+            if seq.req.deadline is None:
+                continue
+            now = self.clock() if now is None else now
+            if now >= seq.req.deadline:
+                if seq.blocks:
+                    self.pool.free(seq.blocks)
+                seq.blocks = []
+                seq.dead = True              # drop its uncommitted in-flight
+                self.slots[seq.slot] = None
+                self._cancel(seq.req, plan)
+
+    def _cancel(self, req: Request, plan: TickPlan) -> None:
+        req.error = RequestError("deadline",
+                                 f"request {req.rid}: deadline exceeded",
+                                 rid=req.rid, retry_after_ticks=1)
+        req.done = True
+        plan.cancelled.append(req)
+        self.stats.cancelled += 1
+
+    def poison(self, seq: SeqState) -> bool:
+        """Reconcile a sequence whose in-flight work faulted: preempt it by
+        recompute (the PR 6 eviction path — committed tokens kept, request
+        requeued at the front, state marked dead so the engine drops its
+        uncommitted tokens).  Greedy decode regenerates the lost tokens
+        deterministically after re-admission, so surviving output is
+        token-exact.  Returns False when the sequence already left its slot
+        (retired/preempted/cancelled in the meantime) — poisoning is then
+        moot."""
+        if seq.dead or self.slots[seq.slot] is not seq:
+            return False
+        self._preempt(seq)
+        self.stats.preemptions -= 1          # reattribute: fault, not pressure
+        self.stats.poisoned += 1
+        return True
+
     # -- internals ------------------------------------------------------------
     def _cow(self, plan: TickPlan, seq: SeqState, i: int, dst: int) -> None:
         """Replace block-table entry ``i`` with freshly-allocated ``dst``:
@@ -333,6 +473,7 @@ class Scheduler:
         source (other owners keep it)."""
         src = seq.blocks[i]
         plan.cow.append((src, dst))
+        plan.cow_owners.append(seq)
         seq.blocks[i] = dst
         self.pool.free([src])
         self.pool.stats.cow_copies += 1

@@ -67,6 +67,8 @@ from ..core.params import MachineDescription, TPU_V5E
 from ..models import (init_paged_cache, paged_copy_block, paged_decode_step,
                       paged_prefill_chunk)
 from ..models.config import ModelConfig
+from . import faults
+from .faults import TickWatchdog
 from .kv_pool import GARBAGE_BLOCK, PagedKVPool
 from .monitor import KernelMonitor
 from .scheduler import Request, Scheduler, SeqState, TickPlan
@@ -191,6 +193,11 @@ class ServeEngine:
                  swap_threshold: float = 1.25,
                  swap_patience: int = 2,
                  monitor_timer: Any = None,
+                 degrade: bool = False,
+                 max_queue: Optional[int] = None,
+                 deadline_ms: Optional[float] = None,
+                 watchdog: bool = True,
+                 clock: faults.Clock = faults.default_clock,
                  machine: MachineDescription = TPU_V5E):
         if cfg.encoder is not None:
             raise ValueError("ServeEngine does not serve encoder-decoder "
@@ -203,6 +210,18 @@ class ServeEngine:
         self.max_len = max_len
         self.page_size = page_size
         self.async_depth = async_depth
+        self.machine = machine
+        # graceful degradation (repro.runtime.faults + DispatchCache.demote):
+        # a recoverable failure inside a guarded tick stage demotes a frozen
+        # kernel pick and retries once; a second failure poisons the affected
+        # sequences (preempt-by-recompute) instead of killing the engine.
+        # Off by default: masking a genuine bug behind a silent retry is the
+        # wrong default for development; serving deployments opt in.
+        self.degrade = degrade
+        self.deadline_ms = deadline_ms
+        self.clock = clock
+        self.watchdog: Optional[TickWatchdog] = (TickWatchdog() if watchdog
+                                                 else None)
         # prompt-skipping needs every skipped position recoverable from the
         # KV pool alone; SSM recurrent state must thread through *every*
         # prompt token, so SSM-bearing configs always prefill in full
@@ -240,7 +259,15 @@ class ServeEngine:
         self.sched = Scheduler(self.pool, max_batch=max_batch,
                                max_len=max_len, prefill_chunk=prefill_chunk,
                                watermark_blocks=watermark_blocks,
-                               prefix_sharing=self.prefix_sharing)
+                               prefix_sharing=self.prefix_sharing,
+                               max_queue=max_queue, clock=clock)
+        # the cache this engine demotes through — captured at construction
+        # so benches/tests that install a private default cache get their
+        # degrade events in that cache, not a later global
+        from ..artifacts.dispatch import get_default_cache
+        self._cache = get_default_cache()
+        self._degrade_rr = 0                 # round-robin over frozen triples
+        self._rejected: List[Request] = []   # shed at submit, surfaced by step
 
         def _prefill(params, tokens, cache, start, block_table, slot):
             logits, cache = paged_prefill_chunk(params, cfg, tokens, cache,
@@ -271,10 +298,26 @@ class ServeEngine:
 
     # -- client API -----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int = 16,
-               eos: Optional[int] = None) -> int:
+               eos: Optional[int] = None,
+               deadline_ms: Optional[float] = None) -> int:
+        """Queue a request; returns its rid.
+
+        Malformed input (empty prompt, ``max_new < 1``, prompt + budget
+        over ``max_len``/pool capacity) raises a structured
+        :class:`~repro.runtime.scheduler.RequestError` — a ``ValueError``
+        subclass, so pre-existing callers keep working.  A well-formed
+        request shed by the queue bound (``max_queue``) does NOT raise: it
+        comes back *done* from a later :meth:`step` with ``req.error.code
+        == "queue_full"`` and a retry-after hint.  ``deadline_ms``
+        overrides the engine-level TTL for this request (absolute deadline
+        = now + TTL on the engine's clock)."""
         self._rid += 1
-        self.sched.submit(Request(self._rid, np.asarray(prompt, np.int32),
-                                  max_new, eos))
+        ms = deadline_ms if deadline_ms is not None else self.deadline_ms
+        deadline = (self.clock() + ms / 1000.0) if ms is not None else None
+        req = Request(self._rid, np.asarray(prompt, np.int32), max_new, eos,
+                      deadline=deadline)
+        if self.sched.submit(req) is not None:
+            self._rejected.append(req)       # shed: surfaced as done
         return self._rid
 
     # -- tick execution -------------------------------------------------------
@@ -301,63 +344,145 @@ class ServeEngine:
         (synchronous engine); at depth ``d`` the newest ``d − 1`` ticks
         stay in flight across the return, overlapping host planning with
         device execution."""
+        faults.set_tick(self.sched.ticks)    # arm the drill's tick cursor
+        t0 = self.clock() if self.watchdog is not None else 0.0
+        done: List[Request] = []
+        if self._rejected:                   # shed submits surface as done
+            done.extend(self._rejected)
+            self._rejected.clear()
         if self.monitor is not None:
             # adaptive loop: cheap counter sampling + (rarely) a hot-swap
             # through the cache's atomic publish; one modulo check on
             # non-probe ticks
             self.monitor.on_tick(self.sched.ticks)
-        self._dispatch(self.sched.tick())
-        done: List[Request] = []
+        tick = self.sched.ticks
+        plan = self.sched.tick()
+        done.extend(plan.cancelled)          # deadline-expired: partial out
+        self._dispatch(plan)
         while len(self._inflight) > self.async_depth - 1:
             done.extend(self._commit(self._inflight.popleft()))
+        if self.watchdog is not None:
+            dt = self.clock() - t0
+            spec = faults.maybe_fault("serve.tick")
+            if spec is not None and spec.kind == "slow":
+                dt += spec.arg / 1e6         # injected hang, in microseconds
+            self.watchdog.observe(dt, tick)
         return done
+
+    def _guard(self, site: str, seqs: Tuple[SeqState, ...], fn, *args):
+        """Run one guarded tick stage: consult the fault injector, then the
+        stage itself.  A recoverable failure with ``degrade`` on demotes
+        the next frozen kernel pick (round-robin over the frozen triples —
+        the engine cannot attribute a batched-step failure to one kernel,
+        so successive failures walk the whole warm set down their
+        rankings) and retries the stage once; a second failure **poisons**
+        ``seqs`` — preempt-by-recompute, reconciled at the commit barrier
+        — and returns ``None`` (the stage's work is skipped this tick).
+        With ``degrade`` off, or on a :class:`~repro.runtime.faults.
+        FatalFault`, the exception propagates — the caller's partial-tick
+        bookkeeping keeps the engine drainable."""
+        try:
+            faults.maybe_fault(site)
+            return fn(*args)
+        except faults.FatalFault:
+            raise
+        except Exception as e:               # noqa: BLE001 — degrade surface
+            if not self.degrade:
+                raise
+            self._demote_next(e)
+            try:
+                faults.maybe_fault(site)
+                return fn(*args)
+            except faults.FatalFault:
+                raise
+            except Exception:                # noqa: BLE001 — second strike
+                for seq in seqs:
+                    self.sched.poison(seq)
+                return None
+
+    def _demote_next(self, error: Exception) -> None:
+        """Fall one frozen pick down its ranking (no-op without a frozen
+        plan: there is no pinned pick to blame, and the locked tiers
+        already re-resolve per call)."""
+        plan = self._cache.frozen_plan
+        triples = [t for t in (plan.triples if plan is not None else ())
+                   if t[1].name == self.machine.name]
+        if not triples:
+            return
+        fam, mach, data = triples[self._degrade_rr % len(triples)]
+        self._degrade_rr += 1
+        self._cache.demote(fam, mach, data, error=error,
+                           tick=self.sched.ticks)
 
     def _dispatch(self, plan: TickPlan) -> None:
         """Execute one tick plan: enqueue the CoW copies, at most one
         prefill chunk, and the batched decode; record the device handles
         of the sampled tokens as an in-flight tick.  No host sync here —
         position accounting advances speculatively (note_prefill /
-        note_decode), outputs land at commit."""
+        note_decode), outputs land at commit.
+
+        Every device stage runs under :meth:`_guard`; a stage that fails
+        twice poisons its sequences and is skipped (a poisoned sequence is
+        dead — later stages this tick must not touch it, hence the
+        ``dead`` re-checks).  The in-flight record is appended even when a
+        fatal fault aborts the tick midway: whatever was dispatched before
+        the abort must still reach the commit barrier, or the pipeline's
+        position accounting wedges and the engine can never drain."""
         for seq in plan.admitted:
             self._reset_slot(seq.slot)
-        for src, dst in plan.cow:
-            # duplicate shared blocks BEFORE this tick writes into them;
-            # other owners keep reading the original
-            self.cache = self._copy(self.cache, jnp.int32(src),
-                                    jnp.int32(dst))
         rec = _InFlight()
-        if plan.prefill is not None:
-            seq, start, chunk = plan.prefill
-            toks = jnp.asarray(seq.target[None, start:start + chunk])
-            seed, self.cache = self._prefill(
-                self.params, toks, self.cache, jnp.int32(start),
-                jnp.asarray(self._block_table(seq)[None]),
-                jnp.int32(seq.slot))
-            self.sched.note_prefill(seq, chunk)
-            if not seq.prefilling:
-                # final chunk: its last-token logits seed decode, exactly
-                # as whole-prompt prefill would
-                self.last_tok = self.last_tok.at[seq.slot].set(seed[0])
-                rec.prefill_seed = (seq, seed)
-        if plan.decode:
-            bts = np.full((self.max_batch, self.blocks_per_seq),
-                          GARBAGE_BLOCK, np.int32)
-            idx = np.zeros(self.max_batch, np.int32)
-            mask = np.zeros(self.max_batch, bool)
-            for seq in plan.decode:
-                bts[seq.slot, :len(seq.blocks)] = seq.blocks
-                idx[seq.slot] = seq.pos
-                mask[seq.slot] = True
-            # one decode for the whole pool with per-row block tables
-            # (continuous batching); non-decoding rows write the garbage
-            # block and keep their SSM state via the mask.
-            toks, self.last_tok, self.cache = self._decode(
-                self.params, self.last_tok, self.cache,
-                jnp.asarray(idx), jnp.asarray(bts), jnp.asarray(mask))
-            for seq in plan.decode:
-                self.sched.note_decode(seq)
-            rec.decode_toks = toks
-            rec.decode_seqs = list(plan.decode)
+        try:
+            for (src, dst), owner in zip(plan.cow, plan.cow_owners):
+                # duplicate shared blocks BEFORE this tick writes into
+                # them; other owners keep reading the original
+                out = self._guard("serve.cow", (owner,), self._copy,
+                                  self.cache, jnp.int32(src), jnp.int32(dst))
+                if out is not None:
+                    self.cache = out
+            if plan.prefill is not None and not plan.prefill[0].dead:
+                seq, start, chunk = plan.prefill
+                toks = jnp.asarray(seq.target[None, start:start + chunk])
+                out = self._guard("serve.prefill", (seq,), self._prefill,
+                                  self.params, toks, self.cache,
+                                  jnp.int32(start),
+                                  jnp.asarray(self._block_table(seq)[None]),
+                                  jnp.int32(seq.slot))
+                if out is not None:
+                    seed, self.cache = out
+                    self.sched.note_prefill(seq, chunk)
+                    if not seq.prefilling:
+                        # final chunk: its last-token logits seed decode,
+                        # exactly as whole-prompt prefill would
+                        self.last_tok = self.last_tok.at[seq.slot].set(seed[0])
+                        rec.prefill_seed = (seq, seed)
+            decoding = [s for s in plan.decode if not s.dead]
+            if decoding:
+                bts = np.full((self.max_batch, self.blocks_per_seq),
+                              GARBAGE_BLOCK, np.int32)
+                idx = np.zeros(self.max_batch, np.int32)
+                mask = np.zeros(self.max_batch, bool)
+                for seq in decoding:
+                    bts[seq.slot, :len(seq.blocks)] = seq.blocks
+                    idx[seq.slot] = seq.pos
+                    mask[seq.slot] = True
+                # one decode for the whole pool with per-row block tables
+                # (continuous batching); non-decoding rows write the garbage
+                # block and keep their SSM state via the mask.
+                out = self._guard("serve.decode", tuple(decoding),
+                                  self._decode, self.params, self.last_tok,
+                                  self.cache, jnp.asarray(idx),
+                                  jnp.asarray(bts), jnp.asarray(mask))
+                if out is not None:
+                    toks, self.last_tok, self.cache = out
+                    for seq in decoding:
+                        self.sched.note_decode(seq)
+                    rec.decode_toks = toks
+                    rec.decode_seqs = list(decoding)
+        except BaseException:
+            # partial tick (degrade off or fatal): keep what was dispatched
+            # committable, then fail loudly — run_until_drained still works
+            self._inflight.append(rec)
+            raise
         self._inflight.append(rec)
 
     def _commit(self, rec: _InFlight) -> List[Request]:
@@ -397,6 +522,22 @@ class ServeEngine:
                 done.append(req)
                 self.sched.retire(seq)       # copy-free: refcounts drop
         return done
+
+    # -- observability --------------------------------------------------------
+    @property
+    def degrade_events(self):
+        """The dispatch cache's recorded :class:`~repro.artifacts.dispatch.
+        DegradeEvent`s (this engine demotes through its captured cache)."""
+        return self._cache.degrade_events
+
+    def robustness_line(self) -> str:
+        s = self.sched.stats
+        line = (f"robustness shed={s.shed} cancelled={s.cancelled} "
+                f"poisoned={s.poisoned} "
+                f"demotions={self._cache.stats.demotions}")
+        if self.watchdog is not None:
+            line += " | " + self.watchdog.stats_line()
+        return line
 
     def run_until_drained(self, max_ticks: int = 1000) -> List[Request]:
         finished: List[Request] = []

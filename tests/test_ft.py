@@ -1,0 +1,201 @@
+"""Direct unit tests for :mod:`repro.runtime.ft` (ISSUE 9 satellite).
+
+The module predates the serving engine and was only covered transitively
+(the chaos drills and the tick watchdog build on it); these tests pin the
+pieces down in isolation: StragglerMonitor's flagging math, the elastic
+mesh policy's divisor fallback, and the TrainController's checkpoint-
+replay retry loop — all pure host-side, no jax."""
+import numpy as np
+import pytest
+
+from repro.runtime.ft import (StragglerMonitor, TrainController,
+                              elastic_mesh_shape)
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------------
+
+
+def _fill(mon, host, seconds, n):
+    for _ in range(n):
+        mon.record(host, seconds)
+
+
+def test_straggler_flagged_over_factor_times_median():
+    mon = StragglerMonitor(factor=2.0, min_samples=8)
+    _fill(mon, 0, 1.0, 8)
+    _fill(mon, 1, 1.0, 8)
+    _fill(mon, 2, 2.5, 8)                      # 2.5 > 2.0 x median(1.0)
+    assert mon.stragglers() == [2]
+    assert mon.medians()[2] == pytest.approx(2.5)
+
+
+def test_straggler_at_factor_boundary_is_not_flagged():
+    mon = StragglerMonitor(factor=2.0, min_samples=4)
+    _fill(mon, 0, 1.0, 4)
+    _fill(mon, 1, 1.0, 4)                      # two fast peers pin the median
+    _fill(mon, 2, 2.0, 4)                      # exactly 2x: strict inequality
+    assert mon.stragglers() == []
+
+
+def test_straggler_needs_min_samples():
+    mon = StragglerMonitor(factor=2.0, min_samples=8)
+    _fill(mon, 0, 1.0, 8)
+    _fill(mon, 2, 1.0, 8)
+    _fill(mon, 1, 10.0, 7)                     # slow but one sample short
+    assert mon.stragglers() == []
+    mon.record(1, 10.0)
+    assert mon.stragglers() == [1]
+
+
+def test_straggler_needs_two_hosts():
+    """One host has no peers to be slower than (the serving watchdog owns
+    the single-host case by judging host 0 against its own history)."""
+    mon = StragglerMonitor(factor=2.0, min_samples=1)
+    _fill(mon, 0, 100.0, 8)
+    assert mon.stragglers() == []
+
+
+def test_straggler_window_forgets_old_slowness():
+    mon = StragglerMonitor(factor=2.0, window=8, min_samples=4)
+    _fill(mon, 0, 1.0, 8)
+    _fill(mon, 2, 1.0, 8)
+    _fill(mon, 1, 10.0, 8)                     # a slow phase...
+    assert mon.stragglers() == [1]
+    _fill(mon, 1, 1.0, 8)                      # ...fully aged out
+    assert len(mon._times[1]) == 8             # window trims the buffer
+    assert mon.stragglers() == []
+
+
+# ---------------------------------------------------------------------------
+# elastic_mesh_shape
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,expected", [
+    (48, (3, 16)),     # divisible: model degree kept
+    (64, (4, 16)),
+    (24, (3, 8)),      # 24 % 16 != 0: halve to 8
+    (12, (3, 4)),
+    (7, (7, 1)),       # odd survivor count: model parallelism collapses
+    (1, (1, 1)),       # a single device still yields a valid mesh
+])
+def test_elastic_mesh_shape(n, expected):
+    data, model = elastic_mesh_shape(n)
+    assert (data, model) == expected
+    assert data * model == n                   # never strands a device
+
+
+def test_elastic_mesh_prefer_model_override():
+    assert elastic_mesh_shape(12, prefer_model=4) == (3, 4)
+    assert elastic_mesh_shape(6, prefer_model=4) == (3, 2)
+
+
+def test_elastic_mesh_rejects_zero_devices():
+    with pytest.raises(ValueError):
+        elastic_mesh_shape(0)
+
+
+# ---------------------------------------------------------------------------
+# TrainController retry replay
+# ---------------------------------------------------------------------------
+
+class _FakeCkpt:
+    """In-memory CheckpointManager double recording every save/restore."""
+
+    def __init__(self):
+        self.saved = {}                        # step -> state snapshot
+        self.restores = 0
+
+    def save_async(self, step, state):
+        self.saved[step] = np.array(state, copy=True)
+
+    save = save_async
+
+    def restore_latest(self, state):
+        if not self.saved:
+            return 0, None
+        step = max(self.saved)
+        self.restores += 1
+        return step, np.array(self.saved[step], copy=True)
+
+
+def _controller(ckpt, *, fault_hook=None, ckpt_every=2, max_retries=3):
+    # state is a scalar ndarray; the "train step" adds the step index, so
+    # any skipped or double-applied step changes the final value — replay
+    # must be exact for the arithmetic to come out right
+    def run_step(state, step):
+        return state + step, {"loss": float(step)}
+
+    return TrainController(run_step=run_step, ckpt=ckpt,
+                           ckpt_every=ckpt_every, max_retries=max_retries,
+                           fault_hook=fault_hook)
+
+
+def test_controller_fault_free_run():
+    ckpt = _FakeCkpt()
+    state, history = _controller(ckpt).run(np.float64(0.0),
+                                           start_step=0, num_steps=6)
+    assert float(state) == sum(range(6))
+    assert [m["step"] for m in history] == list(range(6))
+    assert 6 in ckpt.saved                     # final save
+    assert ckpt.restores == 0
+
+
+def test_controller_replays_from_checkpoint_after_fault():
+    ckpt = _FakeCkpt()
+    killed = []
+
+    def fault_hook(step):
+        if step == 5 and not killed:           # kill step 5 exactly once
+            killed.append(step)
+            raise RuntimeError("injected host loss")
+
+    state, history = _controller(ckpt, fault_hook=fault_hook).run(
+        np.float64(0.0), start_step=0, num_steps=8)
+    # replay is exact: the rerun steps (4, 5 after restoring the step-4
+    # checkpoint) produce identical arithmetic, nothing double-applies
+    assert float(state) == sum(range(8))
+    assert killed == [5] and ckpt.restores == 1
+    # history keeps both attempts' metrics; the *step* sequence rewinds
+    steps = [m["step"] for m in history]
+    assert steps == [0, 1, 2, 3, 4, 4, 5, 6, 7]
+
+
+def test_controller_restarts_from_initial_state_without_checkpoint():
+    """A fault before the first checkpoint restarts from the *initial*
+    state, not just the initial step — rewinding the counter alone would
+    re-apply step 1's update to a state that already contains it."""
+    ckpt = _FakeCkpt()
+    killed = []
+
+    def fault_hook(step):
+        if step == 2 and not killed:           # fails before any checkpoint
+            killed.append(step)
+            raise RuntimeError("early fault")
+
+    state, _ = _controller(ckpt, ckpt_every=100, fault_hook=fault_hook).run(
+        np.float64(0.0), start_step=1, num_steps=4)
+    assert float(state) == sum(range(1, 5))    # full restart, exact replay
+    assert ckpt.restores == 0                  # nothing to restore from
+
+
+def test_controller_raises_after_max_retries():
+    ckpt = _FakeCkpt()
+
+    def always_fail(step):
+        raise RuntimeError("persistent fault")
+
+    with pytest.raises(RuntimeError, match="persistent fault"):
+        _controller(ckpt, fault_hook=always_fail, max_retries=2).run(
+            np.float64(0.0), start_step=0, num_steps=4)
+
+
+def test_controller_never_swallows_keyboard_interrupt():
+    ckpt = _FakeCkpt()
+
+    def interrupt(step):
+        raise KeyboardInterrupt
+
+    with pytest.raises(KeyboardInterrupt):
+        _controller(ckpt, fault_hook=interrupt).run(
+            np.float64(0.0), start_step=0, num_steps=4)
