@@ -770,6 +770,64 @@ def bench_chaos(quick=False):
              f"{eng.robustness_line()}")]
 
 
+def bench_obs_overhead(quick=False):
+    """Cost of the flight recorder (ISSUE 10) on the serve fast path: the
+    ``serve_decode_smoke`` workload run with tracing off vs tracing ON
+    (full event stream + 1-in-8 warm-lane sampling) against one warm
+    engine, alternating batches of identical prompts, best-of-N each.
+    Row value is the percent regression of us/token with tracing on —
+    the baseline pins 5.0 so the standard 2x CI gate enforces the
+    tentpole's < 10% overhead contract.  Tracing *off* must stay the
+    PR 4 contract: the warm lane costs one module-global load + None
+    test, nothing counted."""
+    from repro.artifacts.dispatch import (DispatchCache, get_default_cache,
+                                          set_default_cache)
+    from repro.configs import get_smoke_config
+    from repro.models import init_model
+    from repro.obs import tracing
+    from repro.runtime import ServeEngine
+    cfg = get_smoke_config("llama3_8b")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    prior = get_default_cache()
+    set_default_cache(DispatchCache())
+    try:
+        eng = ServeEngine(cfg, params, max_batch=4, max_len=128,
+                          warm_kernels=True)
+        rng = np.random.default_rng(0)
+        # warmup tick set: compile every quantized chunk shape outside the
+        # timed region (see bench_serve_decode)
+        eng.submit(rng.integers(0, cfg.vocab, 31), max_new=2)
+        eng.run_until_drained()
+        nreq, max_new = (3, 8) if quick else (8, 16)
+        prompts = [rng.integers(0, cfg.vocab,
+                                int(rng.integers(4, 24))) for _ in range(nreq)]
+
+        def run_batch():
+            for p in prompts:
+                eng.submit(p, max_new=max_new)
+            t0 = time.perf_counter()
+            done = eng.run_until_drained()
+            dt = time.perf_counter() - t0
+            toks = sum(len(r.out) for r in done)
+            assert len(done) == nreq and toks > 0
+            return dt * 1e6 / toks
+
+        reps, events = 2 if quick else 3, 0
+        off_us, on_us = [], []
+        for _ in range(reps):                # interleave to cancel drift
+            off_us.append(run_batch())
+            with tracing(capacity=1 << 16, sample_frozen_every=8) as rec:
+                on_us.append(run_batch())
+            events += rec.emitted
+    finally:
+        set_default_cache(prior)
+    off, on = min(off_us), min(on_us)
+    pct = max(0.1, (on - off) / off * 100.0)
+    return [("obs_overhead_pct", pct,
+             f"off={off:.1f}us/tok on={on:.1f}us/tok "
+             f"events={events} reps={reps}")]
+
+
 # Named groups for --only filtering (comma-separated exact names).
 BENCH_GROUPS = (
     ("table1", bench_table1_matmul),
@@ -789,6 +847,7 @@ BENCH_GROUPS = (
     ("lm", bench_lm_step),
     ("adaptive", bench_adaptive_swap),
     ("chaos", bench_chaos),
+    ("obs", bench_obs_overhead),
 )
 
 

@@ -17,6 +17,13 @@ visible straight from the CI log instead of a by-hand JSON diff.  Rows
 faster than the baseline print an invitation to ratchet the committed
 number down.
 
+Win or lose, a machine-readable per-row summary (every gated row with
+its measured/baseline microseconds, ratio, and status; plus the worst
+ratio and the failure count) is written next to the first measured file
+as ``check_bench_summary.json`` (``--summary`` overrides) — CI uploads
+it as an artifact so perf trajectories can be scraped across runs
+without parsing the gate log.
+
     python scripts/check_bench.py BENCH_dispatch.json BENCH_serve_load.json \
         --baseline benchmarks/baseline.json \
         --key dispatch_cold_matmul --max-ratio 2.0 --strict
@@ -25,6 +32,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -52,6 +60,10 @@ def main(argv=None) -> int:
                     help="also fail on measured rows absent from the "
                          "baseline (every benchmark the CI job runs must "
                          "be gated)")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="where to write the per-row ratio summary JSON "
+                         "(default: check_bench_summary.json next to the "
+                         "first measured file)")
     args = ap.parse_args(argv)
 
     measured = load_rows(args.measured)
@@ -61,24 +73,33 @@ def main(argv=None) -> int:
 
     failures = 0
     worst = None                           # (ratio, key, us, base_us)
+    summary_rows = []
     for key in keys:
         base = baseline.get("rows", {}).get(key)
         if base is None:
             print(f"[GATE FAIL] {key}: not in baseline {args.baseline}",
                   file=sys.stderr)
             failures += 1
+            summary_rows.append({"name": key, "status": "no_baseline"})
             continue
         row = measured.get(key)
         if row is None:
             print(f"[GATE FAIL] {key}: missing from measured file(s) "
                   f"(benchmark did not run?)", file=sys.stderr)
             failures += 1
+            summary_rows.append({"name": key, "status": "not_measured",
+                                 "baseline_us": float(base["us"])})
             continue
         us, base_us = float(row["us"]), float(base["us"])
         ratio = us / base_us if base_us > 0 else float("inf")
         if worst is None or ratio > worst[0]:
             worst = (ratio, key, us, base_us)
-        if ratio > args.max_ratio:
+        ok = ratio <= args.max_ratio
+        summary_rows.append({"name": key,
+                             "status": "ok" if ok else "regressed",
+                             "measured_us": us, "baseline_us": base_us,
+                             "ratio": round(ratio, 4)})
+        if not ok:
             print(f"[GATE FAIL] {key}: {us:.1f}us vs baseline "
                   f"{base_us:.1f}us ({ratio:.2f}x > {args.max_ratio:.2f}x)",
                   file=sys.stderr)
@@ -96,10 +117,32 @@ def main(argv=None) -> int:
                   f"{args.baseline} (add a baseline row so it stays gated)",
                   file=sys.stderr)
             failures += 1
+            summary_rows.append({"name": key, "status": "ungated",
+                                 "measured_us": float(measured[key]["us"])})
     if failures and worst is not None:
         print(f"[GATE WORST] {worst[1]}: {worst[2]:.1f}us vs baseline "
               f"{worst[3]:.1f}us ({worst[0]:.2f}x) — the biggest measured "
               f"ratio this run", file=sys.stderr)
+
+    summary_path = args.summary or os.path.join(
+        os.path.dirname(os.path.abspath(args.measured[0])),
+        "check_bench_summary.json")
+    summary = {
+        "baseline": args.baseline,
+        "measured": list(args.measured),
+        "max_ratio": args.max_ratio,
+        "strict": bool(args.strict),
+        "failures": failures,
+        "worst": ({"name": worst[1], "measured_us": worst[2],
+                   "baseline_us": worst[3], "ratio": round(worst[0], 4)}
+                  if worst is not None else None),
+        "rows": sorted(summary_rows, key=lambda r: r["name"]),
+    }
+    with open(summary_path, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[GATE SUMMARY] {len(summary_rows)} row(s), "
+          f"{failures} failure(s) -> {summary_path}")
     return 1 if failures else 0
 
 

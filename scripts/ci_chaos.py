@@ -16,6 +16,11 @@ but standalone so CI runs it against an installed tree in seconds:
 3. **Fatal drill** — an unrecoverable fault must propagate loudly, with
    the engine still drainable afterwards.
 
+The parity sweep and degrade drill run under an installed flight
+recorder (``repro.obs``): every fired fault, demotion, and preemption
+must land in the trace with a matching tick id, and tracing must not
+perturb token parity.
+
 Exits non-zero on the first violated property.
 
     python scripts/ci_chaos.py [--seeds 6] [--config yi_6b]
@@ -23,6 +28,7 @@ Exits non-zero on the first violated property.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -77,6 +83,34 @@ def _drain_checked(eng, max_ticks=300):
     return done
 
 
+def _provenance_errors(rec, inj, eng):
+    """Completeness check for a traced drill: every fault the injector
+    fired, every demotion the cache logged, and every preemption the
+    scheduler counted must appear in the flight-recorder stream, each
+    stamped with the engine tick it happened on."""
+    from repro.runtime.faults import ANY_TICK
+    recs = [json.loads(ln) for ln in rec.export_jsonl().splitlines() if ln]
+    fired = sorted((s.site, s.kind) for s in inj.fired)
+    fault_recs = [r for r in recs if r["etype"] == "fault_fired"]
+    if fired != sorted((r["site"], r["kind"]) for r in fault_recs):
+        return f"fault firings missing from trace (fired={inj.fired})"
+    traced_at = {(r["site"], r["kind"], r["tick"]) for r in fault_recs}
+    for s in inj.fired:
+        if s.tick != ANY_TICK and (s.site, s.kind, s.tick) not in traced_at:
+            return f"fault {s} traced at the wrong tick"
+    want = sorted((ev.family, ev.tick) for ev in eng.degrade_events)
+    got = sorted((r["family"], r["tick"]) for r in recs
+                 if r["etype"] == "degrade")
+    if want != got:
+        return f"demotions missing from trace: events={want} trace={got}"
+    preempts = sum(1 for r in recs if r["etype"] == "admission_decision"
+                   and r["action"] == "preempt")
+    if preempts != eng.sched.stats.preemptions:
+        return (f"preemptions diverge: trace={preempts} "
+                f"stats={eng.sched.stats.preemptions}")
+    return None
+
+
 def _staged_run(eng, prompts, *, max_new=5):
     """Leader first (populating the prefix index), then the followers —
     mid-block divergence then forces CoW.  Returns {rid: tokens}."""
@@ -102,6 +136,7 @@ def main(argv=None) -> int:
     import jax
     from repro.configs import get_smoke_config
     from repro.models import init_model
+    from repro.obs import tracing
     from repro.runtime import faults
     from repro.runtime.faults import (ANY_TICK, FatalFault, FaultSchedule,
                                       FaultSpec)
@@ -121,12 +156,16 @@ def main(argv=None) -> int:
         schedule = FaultSchedule.random(seed, sites=ENGINE_SITES,
                                         max_tick=24, n=4)
         eng = _build_engine(cfg, params, prefix_sharing=True, degrade=True)
-        with faults.inject(schedule) as inj:
-            got = _staged_run(eng, prompts)
+        with tracing(capacity=1 << 16) as rec:
+            with faults.inject(schedule) as inj:
+                got = _staged_run(eng, prompts)
         if got != ref:
             return _fail(f"seed {seed} diverged from the fault-free "
                          f"reference (schedule={list(schedule)}, "
                          f"fired={inj.fired})")
+        err = _provenance_errors(rec, inj, eng)
+        if err:
+            return _fail(f"seed {seed} trace incomplete: {err}")
         total_fired += len(inj.fired)
         print(f"[ci-chaos] seed {seed}: parity ok, "
               f"{len(inj.fired)} fault(s) fired | {eng.robustness_line()}")
@@ -143,15 +182,20 @@ def main(argv=None) -> int:
     eng = _build_engine(cfg, params, warm_kernels=True, degrade=True)
     for p in prompts:
         eng.submit(p, max_new=5)
-    with faults.inject([FaultSpec("serve.prefill", ANY_TICK, "error"),
-                        FaultSpec("serve.decode", ANY_TICK, "error")]):
-        got = {r.rid: list(r.out) for r in _drain_checked(eng)}
+    with tracing(capacity=1 << 16) as rec:
+        with faults.inject([FaultSpec("serve.prefill", ANY_TICK, "error"),
+                            FaultSpec("serve.decode", ANY_TICK, "error")]
+                           ) as inj:
+            got = {r.rid: list(r.out) for r in _drain_checked(eng)}
     if got != warm_ref:
         return _fail("degrade drill diverged from the fault-free reference")
     if len(eng.degrade_events) < 1:
         return _fail("degrade drill recorded no DegradeEvent")
+    err = _provenance_errors(rec, inj, eng)
+    if err:
+        return _fail(f"degrade drill trace incomplete: {err}")
     print(f"[ci-chaos] degrade drill: parity ok, "
-          f"{len(eng.degrade_events)} demotion event(s) | "
+          f"{len(eng.degrade_events)} demotion event(s) traced | "
           f"{eng.robustness_line()}")
 
     # 3. fatal drill: loud failure, engine still drainable

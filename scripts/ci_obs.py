@@ -1,0 +1,190 @@
+#!/usr/bin/env python
+"""CI gate for the observability layer (repro.obs): serve the smoke model
+with tracing on, then prove three properties of the exported trace:
+
+1. **Schema** — every emitted JSONL line validates against the event
+   schema (``repro.obs.events.EVENT_SCHEMA``): known etype, every field
+   present and well-typed, no extras.
+2. **Provenance completeness** — ``scripts/trace_report.py`` aggregation
+   over the trace reconstructs exactly the counts the live stats
+   dataclasses report: admissions/preemptions/sheds/cancels/poisons
+   (``SchedStats``), prefix hits (``PoolStats``), demotions
+   (``DispatchStats`` + ``degrade_events``), fault firings (the
+   injector's ``fired`` log), and one ``tick_span`` per engine tick.
+3. **Determinism** — a re-run with the same seed, schedule, and injected
+   counting clock produces a byte-identical JSONL export (timestamps are
+   tick indices; wall clock never reaches the trace).
+
+Exits non-zero on the first violated property.
+
+    python scripts/ci_obs.py [--config yi_6b]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import numpy as np  # noqa: E402
+
+from trace_report import aggregate  # noqa: E402
+
+
+def _fail(msg: str) -> int:
+    print(f"[CI-OBS FAIL] {msg}", file=sys.stderr)
+    return 1
+
+
+class _CountingClock:
+    """Deterministic monotonic clock: every read advances 0.1 ms.  The
+    engine's only wall-clock uses (watchdog, deadlines, TickSpan
+    durations) go through it, so the trace is seed-exact."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+
+    def __call__(self) -> float:
+        self.now += 1e-4
+        return self.now
+
+
+def _prompts(cfg):
+    """A leader plus followers sharing its first 20 tokens (page-aligned
+    at page_size=4), so the second stage maps prefix blocks."""
+    rng = np.random.default_rng(4321)
+    lead = rng.integers(0, cfg.vocab, 24).astype(np.int32)
+    follows = [np.concatenate([lead[:20], rng.integers(0, cfg.vocab, 8)]
+                              ).astype(np.int32) for _ in range(3)]
+    return [lead] + follows
+
+
+def _run(cfg, params, schedule):
+    """One traced, fault-injected serve of the smoke workload over fresh
+    everything (cache, pool, recorder, clock).  Returns (jsonl, stats)."""
+    from repro.artifacts.dispatch import DispatchCache, set_default_cache
+    from repro.obs import tracing
+    from repro.runtime import ServeEngine, faults
+
+    set_default_cache(DispatchCache())
+    eng = ServeEngine(cfg, params, max_batch=3, max_len=64, page_size=4,
+                      num_blocks=20, prefill_chunk=8, prefix_sharing=True,
+                      warm_kernels=True, plan_store=False, degrade=True,
+                      max_queue=4, clock=_CountingClock())
+    prompts = _prompts(cfg)
+    with tracing(capacity=1 << 16, sample_frozen_every=8) as rec:
+        with faults.inject(schedule) as inj:
+            eng.submit(prompts[0], max_new=5)
+            eng.run_until_drained()
+            for p in prompts[1:]:
+                eng.submit(p, max_new=5)
+            # expire one request immediately for the cancel path, then
+            # over-submit past max_queue to exercise the shed path
+            eng.submit(prompts[0], max_new=5, deadline_ms=0.0)
+            for p in prompts[1:]:
+                eng.submit(p, max_new=5)
+            eng.run_until_drained()
+        jsonl = rec.export_jsonl()
+    stats = {
+        "sched": eng.sched.stats, "pool": eng.pool.stats,
+        "cache": eng._cache, "fired": list(inj.fired),
+        "ticks": eng.sched.ticks, "recorder": rec,
+    }
+    return jsonl, stats
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--config", default="yi_6b",
+                    help="config whose smoke variant is served")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import init_model
+    from repro.obs.events import validate_record
+    from repro.runtime.faults import ANY_TICK, FaultSpec
+
+    cfg = get_smoke_config(args.config)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    # one recoverable kernel fault (degrade -> demotion) + one injected
+    # pool exhaustion — both must land in the trace
+    schedule = [FaultSpec("serve.decode", ANY_TICK, "error"),
+                FaultSpec("pool.alloc", ANY_TICK, "exhaust")]
+
+    jsonl, st = _run(cfg, params, schedule)
+    lines = [ln for ln in jsonl.splitlines() if ln]
+    if not lines:
+        return _fail("traced serve produced an empty event stream")
+    for i, line in enumerate(lines):
+        try:
+            validate_record(json.loads(line))
+        except (ValueError, KeyError, TypeError) as e:
+            return _fail(f"line {i} failed schema validation: {e}\n  {line}")
+    print(f"[ci-obs] schema: {len(lines)} lines valid "
+          f"({st['recorder'].dropped} dropped)")
+
+    rep = aggregate(json.loads(ln) for ln in lines)
+    sched, pool, cache = st["sched"], st["pool"], st["cache"]
+    demotions = sum(c.get("demotions", 0) for c in rep["drift"].values())
+    checks = [
+        ("admit", rep["sched"].get("admit", 0), sched.admissions),
+        ("preempt", rep["sched"].get("preempt", 0), sched.preemptions),
+        ("wait", rep["sched"].get("wait", 0), sched.admission_waits),
+        ("shed", rep["sched"].get("shed", 0), sched.shed),
+        ("cancel", rep["sched"].get("cancel", 0), sched.cancelled),
+        ("poison", rep["sched"].get("poison", 0), sched.poisoned),
+        ("prefix blocks", rep["prefix"].get("blocks", 0), pool.prefix_hits),
+        ("prefix tokens", rep["prefix"].get("tokens_saved", 0),
+         pool.prefix_tokens_saved),
+        ("demotions", demotions, cache.stats.demotions),
+        ("degrade events", demotions, len(cache.degrade_events)),
+        ("faults", rep["faults"].get("total", 0), len(st["fired"])),
+        ("tick spans", rep["ticks"].get("spans", 0), st["ticks"]),
+    ]
+    for name, got, want in checks:
+        if got != want:
+            return _fail(f"count mismatch: trace {name}={got}, "
+                         f"stats say {want}")
+    if sched.shed < 1 or sched.cancelled < 1 or cache.stats.demotions < 1:
+        return _fail("workload failed to exercise shed/cancel/demote "
+                     f"(shed={sched.shed} cancelled={sched.cancelled} "
+                     f"demotions={cache.stats.demotions})")
+    # every demotion and fault firing must carry a matching tick id
+    by_tick = {(e["kind"], e["tick"]) for e in rep["timeline"]}
+    for ev in cache.degrade_events:
+        if ("degrade", ev.tick) not in by_tick:
+            return _fail(f"demotion at tick {ev.tick} missing from trace")
+    fault_recs = [json.loads(ln) for ln in lines
+                  if json.loads(ln)["etype"] == "fault_fired"]
+    fired_sites = sorted((s.site, s.kind) for s in st["fired"])
+    traced_sites = sorted((r["site"], r["kind"]) for r in fault_recs)
+    if fired_sites != traced_sites:
+        return _fail(f"fault firings diverge: injector={fired_sites} "
+                     f"trace={traced_sites}")
+    print(f"[ci-obs] completeness: {len(checks)} counters reconstruct, "
+          f"{demotions} demotion(s) + {len(fault_recs)} fault(s) "
+          f"tick-matched")
+
+    jsonl2, _ = _run(cfg, params, schedule)
+    if jsonl2 != jsonl:
+        a, b = jsonl.splitlines(), jsonl2.splitlines()
+        diff = next((i for i, (x, y) in enumerate(zip(a, b)) if x != y),
+                    min(len(a), len(b)))
+        return _fail(f"re-run trace is not byte-identical (first "
+                     f"divergence at line {diff}: "
+                     f"{a[diff] if diff < len(a) else '<eof>'!r} vs "
+                     f"{b[diff] if diff < len(b) else '<eof>'!r})")
+    print(f"[ci-obs] determinism: re-run byte-identical "
+          f"({len(jsonl)} bytes)")
+
+    print(f"[CI-OBS OK] {len(lines)} events: schema valid, counters "
+          f"reconstruct, trace byte-deterministic")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

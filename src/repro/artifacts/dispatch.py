@@ -63,6 +63,8 @@ from ..core.constraints import Verdict
 from ..core.params import MachineDescription
 from ..core.plan import FamilySpec, Leaf
 from ..core.select import Candidate, rank_candidates
+from ..obs import recorder as obs
+from ..obs.events import DispatchDecision, describe_transition
 from . import serde
 from .store import ArtifactStore
 
@@ -100,11 +102,13 @@ class DegradeEvent:
     exhausted: bool = False
 
     def describe(self) -> str:
-        dims = ",".join(f"{k}={v}" for k, v in self.data)
+        # rendered through the shared obs convention so the degrade and
+        # swap logs cannot drift (a test pins this format)
         tail = " [ladder exhausted; reset]" if self.exhausted else ""
-        return (f"tick {self.tick}: {self.family}@{dims} demoted "
-                f"{self.old[1]} -> {self.new[1]} ({self.source}) "
-                f"after {self.error}{tail}")
+        return describe_transition(
+            tick=self.tick, verb="demoted", family=self.family,
+            data=self.data, old=str(self.old[1]), new=str(self.new[1]),
+            note=self.source, cause=self.error, tail=tail)
 
 
 def frozen_key(family_name: str, machine_name: str,
@@ -298,6 +302,10 @@ class DispatchCache:
         # decided the original resolution: "measured" | "symbolic" | "cold"
         self._lru: "OrderedDict[DispatchKey, Tuple[Candidate, str]]" = \
             OrderedDict()
+        # key -> the winning candidate's walk rank in the ranking that
+        # decided it (provenance for the obs DispatchDecision records;
+        # evicted/invalidated in lockstep with the LRU)
+        self._ranks: Dict[DispatchKey, int] = {}
         # (family, machine) -> (raw payload, leaves parsed once) or None
         self._tables: Dict[Tuple[str, str],
                            Optional[Tuple[Dict[str, Any],
@@ -340,6 +348,12 @@ class DispatchCache:
             ent = frozen.get(family.name, machine.name, data)
             if ent is not None:
                 self.stats.frozen_hits += 1   # lock-free => approximate
+                if obs._recorder is not None:
+                    key = (family.name, machine.name,
+                           tuple(sorted((k, int(v))
+                                        for k, v in data.items())))
+                    self._emit_decision(key, ent.candidate, ent.source,
+                                        0, 0, surface="frozen")
                 return ent.candidate, ent.source
         return self._resolve_tiers(family, machine, data)
 
@@ -357,6 +371,9 @@ class DispatchCache:
             if hit is not None:
                 self._lru.move_to_end(key)
                 self.stats.memory_hits += 1
+                rank = self._ranks.get(key, -1)
+                demoted = len(self._demoted.get(key, ()))
+                self._emit_decision(key, hit[0], hit[1], rank, demoted)
                 return hit
             excluded = frozenset(self._demoted.get(key, ()))
 
@@ -364,12 +381,14 @@ class DispatchCache:
         if hit2 is None:
             ranked = rank_candidates(family, machine, data,
                                      leaves=self._tree(family))
-            cold = next((c for c in ranked if cand_key(c) not in excluded),
-                        ranked[0])   # ladder exhausted: wrap to the top pick
+            rank = next((i for i, c in enumerate(ranked)
+                         if cand_key(c) not in excluded),
+                        0)           # ladder exhausted: wrap to the top pick
+            cold = ranked[rank]
 
         with self._lock:
             if hit2 is not None:
-                cand, measured = hit2
+                cand, measured, rank = hit2
                 source = "measured" if measured else "symbolic"
                 self.stats.disk_hits += 1
                 if measured:
@@ -379,9 +398,30 @@ class DispatchCache:
                 cand, source = cold, "cold"
             self._lru[key] = (cand, source)
             self._lru.move_to_end(key)
+            self._ranks[key] = rank
             while len(self._lru) > self.maxsize:
-                self._lru.popitem(last=False)
+                old_key, _ = self._lru.popitem(last=False)
+                self._ranks.pop(old_key, None)
+        self._emit_decision(key, cand, source, rank, len(excluded))
         return cand, source
+
+    def _emit_decision(self, key: DispatchKey, cand: Candidate, source: str,
+                       rank: int, demoted: int,
+                       surface: str = "resolve") -> None:
+        """Trace one resolution as a :class:`DispatchDecision` — the
+        decision-provenance record (tree leaf + assignment + bucket +
+        deciding ranking + walk rank + demotion marks in effect).  One
+        module-global load when tracing is off."""
+        rec = obs._recorder
+        if rec is None:
+            return
+        rec.emit(DispatchDecision(
+            tick=rec.tick, family=key[0], machine=key[1], data=key[2],
+            bucket=bucket_key(dict(key[2])), leaf=int(cand.leaf_index),
+            assignment=tuple(sorted((k, int(v))
+                             for k, v in cand.assignment.items())),
+            source=source, surface=surface, rank=int(rank),
+            demoted=int(demoted)))
 
     # -- graceful degradation ------------------------------------------------
     def demote(self, family: FamilySpec, machine: MachineDescription,
@@ -425,6 +465,7 @@ class DispatchCache:
         with self._lock:
             self._demoted.setdefault(key, set()).add(old_key)
             self._lru.pop(key, None)          # replacement re-resolves fresh
+            self._ranks.pop(key, None)
             self.stats.demotions += 1
         new_cand, source = self._resolve_tiers(family, machine, data)
         exhausted = cand_key(new_cand) in self._demoted.get(key, ())
@@ -441,6 +482,8 @@ class DispatchCache:
             error=repr(error) if error is not None else "",
             source=source, exhausted=exhausted)
         self.degrade_events.append(event)
+        if obs._recorder is not None:         # join the provenance stream
+            obs._recorder.emit(event)
         return new_cand
 
     def demoted_keys(self, family_name: str, machine_name: str,
@@ -455,6 +498,7 @@ class DispatchCache:
     def clear(self) -> None:
         with self._lock:
             self._lru.clear()
+            self._ranks.clear()
             self._tables.clear()
             self._trees.clear()
             self.stats.reset()
@@ -478,6 +522,7 @@ class DispatchCache:
             self._tables.clear()
             self._trees.clear()
             self._lru.clear()
+            self._ranks.clear()
             plan, self.frozen_plan = self.frozen_plan, None
             gen = self._unfreeze_gen
         if plan is not None and plan.triples:
@@ -658,10 +703,19 @@ class DispatchCache:
         candidate (frozen parity), just a lock and a sorted key dearer.
 
         ``items`` is the data mapping as an items tuple (any order); the
-        first call from a given site teaches the plan its ordering."""
+        first call from a given site teaches the plan its ordering.
+
+        Observability contract: with obs tracing off (or on at the
+        default sampling) this lane stays exactly as described above —
+        each recorder check is one module-global load + ``is None`` test,
+        no counters.  ``FlightRecorder(sample_frozen_every=N)`` opts into
+        a 1-in-N sample of this lane (``surface="warm_sampled"``)."""
         rec = self._recorder                  # one load+test when not tracing
         if rec is not None:
             rec.add(family.name, machine.name, dict(items))
+        orec = obs._recorder                  # one load+test when not tracing
+        if orec is not None and orec.sample_frozen_every:
+            orec.sample_warm(family.name, machine.name, items)
         frozen = self.frozen_plan
         if frozen is not None:
             fn = frozen._fns.get((family, machine.name, items, interpret))
@@ -761,14 +815,17 @@ class DispatchCache:
     def _from_disk(self, family: FamilySpec, machine: MachineDescription,
                    data: Mapping[str, int],
                    exclude: FrozenSet[CandKey] = frozenset()
-                   ) -> Optional[Tuple[Candidate, bool]]:
-        """Resolve via the precompiled table; ``(candidate, measured)`` or
-        ``None``.  ``measured`` flags that a tuned (measured-rank) order
-        decided the walk — :class:`DispatchStats` reports it.  ``exclude``
-        carries runtime-demoted candidate keys (:meth:`demote`): the walk
-        skips them like infeasible entries, falling down the same ranking;
-        a shortlist that is *entirely* excluded returns ``None`` so the
-        cold tier applies its exhaustion wrap-around."""
+                   ) -> Optional[Tuple[Candidate, bool, int]]:
+        """Resolve via the precompiled table; ``(candidate, measured,
+        rank)`` or ``None``.  ``measured`` flags that a tuned
+        (measured-rank) order decided the walk — :class:`DispatchStats`
+        reports it; ``rank`` is the winner's position in that walk (0 =
+        the bucket's top pick — provenance for the obs decision records).
+        ``exclude`` carries runtime-demoted candidate keys
+        (:meth:`demote`): the walk skips them like infeasible entries,
+        falling down the same ranking; a shortlist that is *entirely*
+        excluded returns ``None`` so the cold tier applies its exhaustion
+        wrap-around."""
         loaded = self._bucket_entries(family, machine, data)
         if loaded is None:
             return None
@@ -779,7 +836,7 @@ class DispatchCache:
             entries = [entries[i] for i in order]
         binding = {**machine.bindings(),
                    **{k: int(v) for k, v in data.items()}}
-        for entry in entries:                 # best first (measured/symbolic)
+        for rank, entry in enumerate(entries):  # best first (measured/symbolic)
             try:
                 idx = int(entry["leaf_index"])
                 asg = {k: int(v) for k, v in entry["assignment"].items()}
@@ -802,8 +859,8 @@ class DispatchCache:
                               is Verdict.INCONSISTENT)
             if infeasible:
                 continue                      # infeasible for the exact shape
-            return Candidate(leaf_index=idx, plan=leaf.plan,
-                             assignment=asg, score=score), measured
+            return (Candidate(leaf_index=idx, plan=leaf.plan,
+                              assignment=asg, score=score), measured, rank)
         return None
 
     def rank_source(self, family: FamilySpec, machine: MachineDescription,

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import init_model
+from repro.obs import FlightRecorder, install
 from repro.plans import PlanStore
 from repro.runtime import ServeEngine
 
@@ -89,12 +90,29 @@ def main() -> None:
                     help="per-request deadline: queued or running requests "
                          "older than this are cancelled with a structured "
                          "deadline error (default: none)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="flight recorder: write the run's provenance "
+                         "trace (scheduling decisions, dispatch "
+                         "resolutions, swaps/demotions, fault firings) as "
+                         "JSONL to PATH; feed it to scripts/trace_report.py")
+    ap.add_argument("--trace-sample", type=int, default=0, metavar="N",
+                    help="with --trace: sample 1-in-N hits of the frozen "
+                         "warm_callable lane as dispatch_decision records "
+                         "(default 0 = the warm lane stays uncounted)")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="flight-recorder ring size in events; the oldest "
+                         "age out first and are counted as dropped")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     if cfg.encoder is not None:
         raise SystemExit("enc-dec serving demo not wired for CLI; "
                          "see tests/test_serving.py")
+    recorder = None
+    if args.trace:
+        recorder = FlightRecorder(capacity=args.trace_capacity,
+                                  sample_frozen_every=args.trace_sample)
+        install(recorder)
     params, _ = init_model(jax.random.PRNGKey(args.seed), cfg)
     plan_store = PlanStore(args.plan_dir) if args.plan_dir else None
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
@@ -115,9 +133,8 @@ def main() -> None:
                       max_queue=args.max_queue,
                       deadline_ms=args.deadline_ms)
     if eng.kernel_plan:
-        for name, info in eng.kernel_plan.items():
-            print(f"kernel {name} [{info['rank_source']}]: "
-                  f"{info['candidate'].describe()}")
+        print(f"warm-up: {len(eng.kernel_plan)} kernel picks resolved "
+              f"(final provenance reported after the run)")
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -132,26 +149,26 @@ def main() -> None:
             print(f"req {r.rid}: [{r.error.code}] {r.error}")
         else:
             print(f"req {r.rid}: {r.out}")
-    st = eng.sched.stats
-    pst = eng.pool.stats
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s); pool {eng.pool.capacity} blocks x "
-          f"{eng.page_size} tokens, peak_live={pst.peak_live}, "
-          f"prefill_chunks={st.prefill_chunks}, "
-          f"prefill_tokens={st.prefill_tokens}, "
-          f"preemptions={st.preemptions}, waits={st.admission_waits}")
-    if eng.prefix_sharing:
-        print(f"prefix sharing: hits={pst.prefix_hits} blocks, "
-              f"tokens_saved={pst.prefix_tokens_saved}, "
-              f"cow_copies={pst.cow_copies}, "
-              f"cache_evictions={pst.cache_evictions}")
+          f"({toks/dt:.1f} tok/s)")
+    # the unified registry replaces the old scattered stats prints; the
+    # kernel report reads the *current* frozen plan, so picks changed by
+    # a monitor hot-swap or a degradation demote carry their live
+    # provenance, not the warm-up snapshot
+    reg = eng.registry()
+    print(reg.summary_line())
+    for line in reg.kernel_report():
+        print(line)
     if eng.monitor is not None:
-        print(eng.monitor.stats_line())
         for ev in eng.monitor.events:
             print(f"swap {ev.describe()}")
-    print(eng.robustness_line())
     for ev in eng.degrade_events:
         print(f"degrade {ev.describe()}")
+    if recorder is not None:
+        with open(args.trace, "w") as fh:
+            fh.write(recorder.export_jsonl())
+        print(f"trace: {recorder.emitted} events "
+              f"({recorder.dropped} dropped) -> {args.trace}")
 
 
 if __name__ == "__main__":

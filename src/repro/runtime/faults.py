@@ -61,6 +61,8 @@ from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import recorder as obs
+from ..obs.events import FaultFired
 from .ft import StragglerMonitor
 
 #: ``FaultSpec.tick`` wildcard: fire on the next call to the site, whatever
@@ -202,6 +204,12 @@ class FaultInjector:
         for i, spec in enumerate(specs):
             if spec.tick == ANY_TICK or spec.tick == self.tick:
                 self.fired.append(specs.pop(i))
+                if obs._recorder is not None:
+                    # every firing joins the provenance stream, stamped
+                    # with the *injector's* tick (== the engine tick)
+                    obs._recorder.emit(FaultFired(
+                        tick=int(self.tick), site=spec.site,
+                        kind=spec.kind, arg=int(spec.arg)))
                 return spec
         return None
 

@@ -44,6 +44,8 @@ import numpy as np
 
 from ..artifacts.dispatch import CandKey, cand_key  # noqa: F401 — re-export
 from ..core.comprehensive import comprehensive_tree
+from ..obs import recorder as obs
+from ..obs.events import describe_transition
 from ..core.constraints import Verdict
 from ..core.params import MachineDescription, TPU_V5E
 from ..core.plan import FamilySpec
@@ -83,11 +85,14 @@ class SwapEvent:
     windows: int                             # disagreeing streak length
 
     def describe(self) -> str:
-        dims = ",".join(f"{k}={v}" for k, v in self.data)
-        return (f"tick {self.tick}: {self.family}@{dims} "
-                f"{self.old[1]} ({self.incumbent_us:.1f}us) -> "
-                f"{self.new[1]} ({self.challenger_us:.1f}us) "
-                f"after {self.windows} windows")
+        # rendered through the shared obs convention so the swap and
+        # degrade logs cannot drift (a test pins this format)
+        return describe_transition(
+            tick=self.tick, verb="swapped", family=self.family,
+            data=self.data,
+            old=f"{self.old[1]} ({self.incumbent_us:.1f}us)",
+            new=f"{self.new[1]} ({self.challenger_us:.1f}us)",
+            cause=f"{self.windows} windows")
 
 
 class _Reservoir:
@@ -341,6 +346,8 @@ class KernelMonitor:
                           challenger_us=float(ch_us),
                           windows=self.patience)
         self.events.append(event)
+        if obs._recorder is not None:         # join the provenance stream
+            obs._recorder.emit(event)
         _LOG.info("kernel hot-swap: %s", event.describe())
 
     # -- observability --------------------------------------------------------

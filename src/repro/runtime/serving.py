@@ -67,6 +67,9 @@ from ..core.params import MachineDescription, TPU_V5E
 from ..models import (init_paged_cache, paged_copy_block, paged_decode_step,
                       paged_prefill_chunk)
 from ..models.config import ModelConfig
+from ..obs import ObsRegistry
+from ..obs import recorder as obs
+from ..obs.events import TickSpan
 from . import faults
 from .faults import TickWatchdog
 from .kv_pool import GARBAGE_BLOCK, PagedKVPool
@@ -345,7 +348,10 @@ class ServeEngine:
         stay in flight across the return, overlapping host planning with
         device execution."""
         faults.set_tick(self.sched.ticks)    # arm the drill's tick cursor
-        t0 = self.clock() if self.watchdog is not None else 0.0
+        obs.set_tick(self.sched.ticks)       # ...and the trace's, in lockstep
+        orec = obs.get_recorder()
+        timed = self.watchdog is not None or orec is not None
+        t0 = self.clock() if timed else 0.0
         done: List[Request] = []
         if self._rejected:                   # shed submits surface as done
             done.extend(self._rejected)
@@ -361,12 +367,26 @@ class ServeEngine:
         self._dispatch(plan)
         while len(self._inflight) > self.async_depth - 1:
             done.extend(self._commit(self._inflight.popleft()))
-        if self.watchdog is not None:
+        if timed:
             dt = self.clock() - t0
             spec = faults.maybe_fault("serve.tick")
             if spec is not None and spec.kind == "slow":
                 dt += spec.arg / 1e6         # injected hang, in microseconds
-            self.watchdog.observe(dt, tick)
+            if self.watchdog is not None:
+                self.watchdog.observe(dt, tick)
+            if orec is not None:
+                # one span per tick: what the plan scheduled, what
+                # committed, and the host-side duration on the engine's
+                # injectable clock (tick indices are the only timestamps,
+                # so a counting clock makes the whole trace deterministic)
+                orec.emit(TickSpan(
+                    tick=tick, admitted=len(plan.admitted),
+                    prefill_tokens=(plan.prefill[2]
+                                    if plan.prefill is not None else 0),
+                    decode_rows=len(plan.decode),
+                    preempted=len(plan.preempted),
+                    cancelled=len(plan.cancelled), finished=len(done),
+                    duration_us=dt * 1e6))
         return done
 
     def _guard(self, site: str, seqs: Tuple[SeqState, ...], fn, *args):
@@ -524,6 +544,13 @@ class ServeEngine:
         return done
 
     # -- observability --------------------------------------------------------
+    def registry(self) -> ObsRegistry:
+        """This engine's unified metrics registry: pool, scheduler,
+        dispatch cache, monitor, and watchdog behind one ``snapshot()`` /
+        ``render_text()`` / ``summary_line()`` surface.  Parts are
+        resolved per snapshot, so a monitor attached later is reported."""
+        return ObsRegistry.from_engine(self)
+
     @property
     def degrade_events(self):
         """The dispatch cache's recorded :class:`~repro.artifacts.dispatch.

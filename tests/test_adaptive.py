@@ -293,7 +293,9 @@ def test_engine_hot_swap_is_token_exact(rng):
     """An engine whose monitor hot-swaps a kernel pick mid-traffic emits
     exactly the token streams of an unmonitored reference engine — the
     swap changes *which variant dispatches*, never *what it computes*
-    (PR 7 parity idiom: same prompts, compare Request.out)."""
+    (PR 7 parity idiom: same prompts, compare Request.out).  The swap
+    must also land in an installed flight recorder with a matching tick
+    id (ISSUE 10 provenance-completeness)."""
     import jax
     from repro.configs import get_smoke_config
     from repro.models import init_model
@@ -330,9 +332,17 @@ def test_engine_hot_swap_is_token_exact(rng):
         done = eng.run_until_drained()
         return eng, {r.rid: list(r.out) for r in done}
 
+    from repro.obs import tracing
+
     ref_eng, ref_out = serve(monitored=False)
-    mon_eng, mon_out = serve(monitored=True)
+    with tracing(capacity=1 << 14) as rec:
+        mon_eng, mon_out = serve(monitored=True)
     assert mon_eng.monitor.stats.swaps >= 1          # the swap really fired
     assert mon_eng.monitor.events
     assert mon_out == ref_out                        # token-exact across it
     assert ref_eng.monitor is None
+    # provenance-completeness: every SwapEvent appears in the trace, in
+    # order, stamped with the tick the monitor swapped on
+    traced = [(r["family"], r["tick"]) for r in rec.records()
+              if r["etype"] == "swap"]
+    assert traced == [(e.family, e.tick) for e in mon_eng.monitor.events]

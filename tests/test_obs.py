@@ -1,0 +1,325 @@
+"""Observability layer (ISSUE 10): flight recorder, event schema,
+decision provenance, and the unified metrics registry.
+
+Acceptance properties:
+
+- the ring is bounded with monotonic seq ids and counted (never silent)
+  drops; the frozen warm lane stays uncounted unless 1-in-N sampling is
+  opted into;
+- JSONL export is byte-deterministic (sorted keys, minimal separators,
+  tick-index timestamps) and every record validates against
+  ``EVENT_SCHEMA``;
+- ``SwapEvent.describe`` and ``DegradeEvent.describe`` render through
+  ONE pinned transition convention (satellite: the two logs cannot
+  drift);
+- over a seeded 500-cycle alloc/retire + preempt workload, the live
+  ``PoolStats``/``SchedStats`` counters exactly equal an independently
+  hand-tracked reference, and the trace reconstructs them;
+- ``DispatchCache`` emits a provenance record per non-frozen resolution
+  (tier source, candidate rank, demotion marks) and ``demote`` lands in
+  the trace;
+- ``ObsRegistry`` snapshots every surface and renders stable text.
+"""
+import dataclasses
+import json
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.artifacts import DispatchCache
+from repro.artifacts.dispatch import DegradeEvent
+from repro.core import TPU_V5E
+from repro.kernels.matmul import FAMILY as MATMUL
+from repro.obs import (FlightRecorder, ObsRegistry, describe_transition,
+                       get_recorder, install, tracing, validate_record)
+from repro.obs.events import AdmissionDecision, DispatchDecision, TickSpan
+from repro.runtime.kv_pool import PREFIX_ROOT, PagedKVPool
+from repro.runtime.monitor import SwapEvent
+from repro.runtime.scheduler import Request, Scheduler
+
+MM_DATA = {"M": 64, "N": 64, "K": 64}
+
+
+def _adm(i):
+    return AdmissionDecision(tick=i, action="admit", rid=i, slot=0,
+                             queue_depth=0)
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder: ring bounds, sampling, determinism
+# ---------------------------------------------------------------------------
+
+def test_ring_bounds_counted_drops_and_monotonic_seq():
+    rec = FlightRecorder(capacity=8)
+    for i in range(20):
+        rec.emit(_adm(i))
+    assert rec.emitted == 20
+    assert len(rec) == 8
+    assert rec.dropped == 12                 # aged out, counted not silent
+    seqs = [r["seq"] for r in rec.records()]
+    assert seqs == list(range(12, 20))       # ids climb across drops
+    for r in rec.records():
+        validate_record(r)
+
+
+def test_recorder_rejects_bad_knobs():
+    with pytest.raises(ValueError):
+        FlightRecorder(capacity=0)
+    with pytest.raises(ValueError):
+        FlightRecorder(sample_frozen_every=-1)
+
+
+def test_warm_lane_sampling_is_one_in_n():
+    rec = FlightRecorder(sample_frozen_every=3)
+    for _ in range(10):
+        rec.sample_warm("matmul", "tpu_v5e", {"M": 8})
+    recs = rec.records()
+    assert len(recs) == 3                    # calls 3, 6, 9
+    for r in recs:
+        validate_record(r)
+        assert r["surface"] == "warm_sampled"
+        assert r["source"] == "frozen"
+        assert r["family"] == "matmul"
+
+
+def test_export_jsonl_is_byte_deterministic():
+    def build():
+        rec = FlightRecorder()
+        rec.tick = 3
+        rec.emit(DispatchDecision(
+            tick=3, family="matmul", machine="tpu_v5e", data=(("M", 8),),
+            bucket="b0", leaf=2, assignment=(("TX", 4),), source="measured",
+            surface="resolve", rank=1, demoted=0))
+        rec.emit(TickSpan(tick=3, admitted=1, prefill_tokens=8,
+                          decode_rows=2, preempted=0, cancelled=0,
+                          finished=1, duration_us=12.5))
+        return rec.export_jsonl()
+
+    a, b = build(), build()
+    assert a == b and a.endswith("\n")
+    for line in a.splitlines():
+        rec = json.loads(line)
+        validate_record(rec)
+        assert list(rec) == sorted(rec)      # sorted keys on the wire
+        assert ": " not in line and ", " not in line   # minimal separators
+
+
+def test_tracing_context_restores_previous_recorder():
+    outer = FlightRecorder()
+    install(outer)
+    try:
+        with tracing() as inner:
+            assert get_recorder() is inner
+        assert get_recorder() is outer
+    finally:
+        install(None)
+
+
+# ---------------------------------------------------------------------------
+# Schema validation
+# ---------------------------------------------------------------------------
+
+def test_validate_record_rejects_malformed_records():
+    good = {"seq": 0, "etype": "fault_fired", "tick": 1, "site": "s",
+            "kind": "error", "arg": 0}
+    validate_record(good)                    # sanity: the fixture is valid
+    bads = [
+        {**good, "etype": "nope"},                       # unknown etype
+        {k: v for k, v in good.items() if k != "site"},  # missing field
+        {**good, "arg": "zero"},                         # wrong type
+        {**good, "extra": 1},                            # unknown field
+        {**good, "seq": -1},                             # bad seq
+        {"seq": 0, "etype": "admission_decision", "tick": 0,
+         "action": "explode", "rid": 1, "slot": -1,
+         "queue_depth": 0},                              # unknown action
+    ]
+    for bad in bads:
+        with pytest.raises(ValueError):
+            validate_record(bad)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: one pinned rendering convention for swap + degrade logs
+# ---------------------------------------------------------------------------
+
+def test_swap_and_degrade_describe_share_pinned_format():
+    old = (2, (("TX", 8),))
+    new = (5, (("TX", 16),))
+    swap = SwapEvent(tick=7, family="matmul", data=(("M", 512), ("N", 512)),
+                     old=old, new=new, incumbent_us=12.0, challenger_us=3.5,
+                     windows=2)
+    assert swap.describe() == (
+        "tick 7: swapped matmul@M=512,N=512 "
+        "(('TX', 8),) (12.0us) -> (('TX', 16),) (3.5us) after 2 windows")
+    ev = DegradeEvent(tick=9, family="matmul", machine="tpu_v5e",
+                      data=(("M", 512),), old=old, new=new,
+                      error="InjectedFault('serve.decode')",
+                      source="measured")
+    assert ev.describe() == (
+        "tick 9: demoted matmul@M=512 "
+        "(('TX', 8),) -> (('TX', 16),) (measured) "
+        "after InjectedFault('serve.decode')")
+    ex = dataclasses.replace(ev, exhausted=True)
+    assert ex.describe() == ev.describe() + " [ladder exhausted; reset]"
+    # both renderings come out of the one shared helper
+    assert describe_transition(
+        tick=1, verb="v", family="f", data=(("a", 2),), old="O", new="N",
+        note="n", cause="c", tail="!") == "tick 1: v f@a=2 O -> N (n) after c!"
+
+
+# ---------------------------------------------------------------------------
+# Satellite: counters vs a hand-tracked reference (seeded 500 cycles)
+# ---------------------------------------------------------------------------
+
+def test_pool_counters_match_hand_tracked_reference(rng):
+    """500 seeded alloc/register/retire cycles: ``peak_live`` and
+    ``cache_evictions`` must equal a reference tracked from the pool's
+    *structural* observables (free list + refcount table sizes), not its
+    stats."""
+    pool = PagedKVPool(17, 4)                # 16 allocatable blocks
+    live, tok = [], 0
+    expected_peak = expected_evictions = 0
+    for _ in range(500):
+        if rng.random() < 0.55 or not live:
+            n = int(rng.integers(1, 4))
+            free_before = pool.num_free
+            reclaim_before = pool.num_reclaimable
+            got = pool.alloc(n)
+            if got is None:                  # refusal: genuinely short
+                assert n > free_before + reclaim_before
+                continue
+            # alloc reclaims exactly the shortfall from the prefix cache
+            expected_evictions += max(0, n - free_before)
+            h = PREFIX_ROOT                  # pin each block in the index
+            for b in got:
+                h = pool.register_prefix(h, tuple(range(tok, tok + 4)), b)
+                tok += 4
+            live.append(got)
+            expected_peak = max(expected_peak, pool.num_live)
+        else:
+            pool.free(live.pop(int(rng.integers(len(live)))))
+    assert pool.stats.peak_live == expected_peak
+    assert pool.stats.cache_evictions == expected_evictions
+    assert expected_evictions > 0            # the mix really hit pressure
+    pool.check_invariants(block_tables=live)
+
+
+def test_sched_counters_match_hand_tracked_reference_and_trace(rng):
+    """500 seeded scheduler ticks under pool pressure + a queue bound
+    (the ``test_kv_pool._drive`` engine stand-in): ``admissions``/
+    ``preemptions``/``shed`` must equal per-tick hand counts, and the
+    emitted ``admission_decision`` stream must reconstruct all of them
+    (the action <-> counter mapping is 1:1)."""
+    pool = PagedKVPool(7, 4)                 # 6 blocks: decode growth preempts
+    sched = Scheduler(pool, max_batch=2, max_len=24, prefill_chunk=8,
+                      watermark_blocks=0, max_queue=3)
+    admitted_ref = preempt_ref = shed_ref = 0
+    rid = 0
+    with tracing(capacity=1 << 15) as rec:
+        for _ in range(500):
+            if rng.random() < 0.5:
+                req = Request(rid, np.zeros(int(rng.integers(4, 9)),
+                                            np.int32),
+                              max_new=int(rng.integers(4, 15)))
+                rid += 1
+                if sched.submit(req) is not None:
+                    shed_ref += 1
+            plan = sched.tick()
+            admitted_ref += len(plan.admitted)
+            preempt_ref += len(plan.preempted)
+            if plan.prefill is not None:
+                seq, _, chunk = plan.prefill
+                sched.note_prefill(seq, chunk)
+                if not seq.prefilling:
+                    seq.req.out.append(0)    # last-chunk logits seed decode
+            for seq in plan.decode:
+                seq.req.out.append(0)
+                sched.note_decode(seq)
+            for seq in list(sched.running()):
+                if not seq.prefilling and len(seq.req.out) >= seq.req.max_new:
+                    seq.req.done = True
+                    sched.retire(seq)
+            pool.check_invariants(
+                block_tables=[s.blocks for s in sched.running()])
+    assert sched.stats.admissions == admitted_ref
+    assert sched.stats.preemptions == preempt_ref
+    assert sched.stats.shed == shed_ref
+    assert preempt_ref > 0 and shed_ref > 0  # the workload exercised both
+    assert rec.dropped == 0
+    actions = Counter(r["action"] for r in rec.records()
+                      if r["etype"] == "admission_decision")
+    assert actions["admit"] == admitted_ref
+    assert actions["preempt"] == preempt_ref
+    assert actions["shed"] == shed_ref
+    assert actions["wait"] == sched.stats.admission_waits
+    assert actions["cancel"] == actions["poison"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Dispatch provenance: tier source + candidate rank + demotion marks
+# ---------------------------------------------------------------------------
+
+def test_dispatch_decisions_carry_rank_and_source():
+    cache = DispatchCache()
+    with tracing() as rec:
+        cand, src = cache.best_variant_with_source(MATMUL, TPU_V5E, MM_DATA)
+        cache.best_variant(MATMUL, TPU_V5E, MM_DATA)   # memory-LRU hit
+    recs = [r for r in rec.records() if r["etype"] == "dispatch_decision"]
+    assert len(recs) == 2                    # one record per resolution
+    cold, mem = recs
+    for r in recs:
+        validate_record(r)
+        assert r["surface"] == "resolve"
+        assert r["source"] == src
+        assert r["leaf"] == cand.leaf_index
+        assert r["demoted"] == 0
+    assert mem["rank"] == cold["rank"]       # the LRU replays the walk rank
+    assert cold["rank"] >= 0
+
+
+def test_demote_lands_in_trace_with_provenance():
+    cache = DispatchCache()
+    cache.best_variant(MATMUL, TPU_V5E, MM_DATA)       # resolve untraced
+    with tracing() as rec:
+        new = cache.demote(MATMUL, TPU_V5E, MM_DATA,
+                           error=RuntimeError("boom"), tick=5)
+        cand2 = cache.best_variant(MATMUL, TPU_V5E, MM_DATA)
+    assert cand2 == new                      # the demotion took effect
+    degr = [r for r in rec.records() if r["etype"] == "degrade"]
+    assert len(degr) == 1
+    validate_record(degr[0])
+    assert degr[0]["tick"] == 5
+    assert "boom" in degr[0]["error"]
+    post = [r for r in rec.records() if r["etype"] == "dispatch_decision"]
+    assert post and post[-1]["demoted"] >= 1  # marks visible to dispatch
+
+
+# ---------------------------------------------------------------------------
+# Registry: snapshot / render_text / summary_line
+# ---------------------------------------------------------------------------
+
+def test_registry_snapshot_render_and_summary():
+    pool = PagedKVPool(9, 4)
+    sched = Scheduler(pool, max_batch=2, max_len=16)
+    rec = FlightRecorder(capacity=16)
+    rec.emit(_adm(0))
+    reg = ObsRegistry(pool=pool, sched=sched, recorder=rec)
+    snap = reg.snapshot()
+    assert snap["pool"]["capacity"] == 8
+    assert snap["pool"]["peak_live"] == 0
+    assert snap["sched"]["ticks"] == 0
+    assert snap["recorder"] == {"emitted": 1, "buffered": 1, "dropped": 0,
+                                "capacity": 16, "sample_frozen_every": 0}
+    assert snap["monitor"] == {} and snap["watchdog"] == {}
+    lines = reg.render_text().splitlines()
+    assert "repro_pool_capacity 8" in lines
+    assert "repro_recorder_emitted 1" in lines
+    assert lines == sorted(lines)            # stable exposition order
+    for line in lines:
+        name, value = line.rsplit(" ", 1)
+        assert name.startswith("repro_")
+        float(value)                         # every value parses numeric
+    line = reg.summary_line()
+    assert line.startswith("obs ")
+    assert "ticks=0" in line and "trace n=1" in line
